@@ -1,0 +1,90 @@
+"""Kernel microbenchmarks: XLA-reference wall time on CPU + interpret-mode
+oracle agreement for the three Pallas kernels.
+
+On-CPU wall times are NOT the perf deliverable (that's the roofline table,
+derived from the compiled TPU-mesh dry-run) — this benchmark (a) proves the
+kernel semantics at benchmark scale, and (b) gives the XLA-path throughput
+that the sharded engine falls back to off-TPU.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import print_table, save
+
+
+def _time(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def run(full: bool = False):
+    n, d, beta, Q = (65_536, 128, 256, 64) if full else (16_384, 128, 128, 32)
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.uniform(0, 1000, (n, d)).astype(np.float32))
+    qs = jnp.asarray(rng.uniform(0, 1000, (Q, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(1, 10, d).astype(np.float32))
+    proj = jnp.asarray(rng.normal(0, 1, (d, beta)).astype(np.float32))
+    b = rng.uniform(0, 729, beta)
+    b_int = jnp.asarray(np.floor(b).astype(np.int32))
+    b_frac = jnp.asarray((b - np.floor(b)).astype(np.float32))
+
+    rows = []
+
+    t, codes_p = _time(ops.hash_encode, pts, w, proj, b_int, b_frac, 25.0,
+                       use_pallas=False)
+    gflops = 2 * n * d * beta / t / 1e9
+    rows.append(["hash_encode", f"({n},{d})x({d},{beta})",
+                 round(t * 1e3, 2), round(gflops, 1)])
+
+    codes_q = ops.hash_encode(qs, w, proj, b_int, b_frac, 25.0,
+                              use_pallas=False)
+    t, _ = _time(ops.freq_level, codes_p, codes_q, 8, c=2, n_levels=12,
+                 use_pallas=False)
+    gcomp = Q * n * beta * 13 / t / 1e9  # compare-ops, not FLOPs
+    rows.append(["freq_level", f"Q={Q} n={n} beta={beta} L=12",
+                 round(t * 1e3, 2), round(gcomp, 1)])
+
+    t, _ = _time(ops.weighted_lp_dist, qs, pts, w, 2.0, use_pallas=False)
+    gflops = 3 * Q * n * d / t / 1e9
+    rows.append(["weighted_lp(p=2)", f"Q={Q} n={n} d={d}",
+                 round(t * 1e3, 2), round(gflops, 1)])
+
+    t, _ = _time(ops.weighted_lp_dist, qs, pts, w, 1.0, use_pallas=False)
+    rows.append(["weighted_lp(p=1)", f"Q={Q} n={n} d={d}",
+                 round(t * 1e3, 2), round(3 * Q * n * d / t / 1e9, 1)])
+
+    print_table("Kernel microbench (XLA reference path, CPU)",
+                ["kernel", "shape", "ms/call", "G(fl)ops/s"], rows)
+
+    # interpret-mode oracle agreement at a reduced size (kernel body runs
+    # per grid cell in Python — keep it small)
+    ns, qs_n = 512, 8
+    cp = codes_p[:ns]
+    cq = codes_q[:qs_n]
+    a = np.array(ops.freq_level(cp, cq, 4, c=2, n_levels=8, use_pallas=False))
+    bq = np.array(ops.freq_level(cp, cq, 4, c=2, n_levels=8, use_pallas=True,
+                                 interpret=True, bn=128))
+    agree = bool((a == bq).all())
+    rows.append(["freq_level pallas-interpret == ref", f"n={ns}", "-",
+                 "OK" if agree else "MISMATCH"])
+    out = {"rows": rows, "pallas_interpret_agrees": agree}
+    save("kernel_bench", out)
+    assert agree
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,4 @@
+"""repro: WLSH (weighted-LSH multi-weight ANN search) as a first-class
+feature of a multi-pod JAX training/serving framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+"""Architecture registry: one module per assigned arch, plus shapes."""
+
+from .base import ARCHS, SHAPES, ModelConfig, ShapeConfig, get_config, reduced
+
+__all__ = ["ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+           "reduced"]

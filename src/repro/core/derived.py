@@ -1,0 +1,81 @@
+"""Derived weighted LSH families: Theorem 1 bounds + bound relaxation.
+
+Given tables built for center weight W and a query weight W', the derived
+family H_{W->W'} hashes identically but its sensitivity bounds shrink:
+
+  l_p:  R^up = R * max_i(w_i / w'_i),   (cR)^down = cR * min_i(w_i / w'_i)
+
+Bound relaxation (Eqs. 14-15) replaces max/min with the v-th largest /
+v'-th smallest of T = {w_i / w'_i}; v = v' = 1 recovers Theorem 1.  The
+derived family is *useful* iff x^up < y^down for x = r_min^{W'},
+y = c r_min^{W'}.
+
+All functions are vectorized over a batch of target weight vectors so the
+partition step can evaluate O(|S|^2) pairs cheaply; the heavy ratio
+reduction runs through jax.jit on CPU in chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ratio_bounds", "derived_sensitivity", "angular_bounds"]
+
+
+@functools.partial(jax.jit, static_argnames=("v", "v_prime"))
+def _ratio_reduce(center: jax.Array, targets: jax.Array, v: int, v_prime: int):
+    """(hi, lo) where hi = v-th largest, lo = v'-th smallest of w_i/w'_i."""
+    t = center[None, :] / targets  # (m, d)
+    if v == 1 and v_prime == 1:
+        return jnp.max(t, axis=-1), jnp.min(t, axis=-1)
+    hi = jax.lax.top_k(t, v)[0][:, -1]
+    lo = -jax.lax.top_k(-t, v_prime)[0][:, -1]
+    return hi, lo
+
+
+def ratio_bounds(
+    center: np.ndarray,
+    targets: np.ndarray,
+    v: int = 1,
+    v_prime: int = 1,
+    chunk: int = 4096,
+) -> tuple[np.ndarray, np.ndarray]:
+    """T^{(v)} and T^{(d+1-v')} per target weight vector (Eqs. 14-15)."""
+    targets = np.atleast_2d(np.asarray(targets, np.float64))
+    center = np.asarray(center, np.float64)
+    his, los = [], []
+    for i in range(0, len(targets), chunk):
+        h, l = _ratio_reduce(
+            jnp.asarray(center), jnp.asarray(targets[i : i + chunk]), v, v_prime
+        )
+        his.append(np.asarray(h))
+        los.append(np.asarray(l))
+    return np.concatenate(his), np.concatenate(los)
+
+
+def derived_sensitivity(
+    x: np.ndarray, y: np.ndarray, hi: np.ndarray, lo: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(x_up, y_down, useful) for the derived family at radii (x, y=c x).
+
+    x_up = x * hi, y_down = y * lo (Theorem 2); useful iff 0 < x_up < y_down.
+    """
+    x_up = np.asarray(x) * hi
+    y_down = np.asarray(y) * lo
+    useful = (x_up > 0) & (x_up < y_down)
+    return x_up, y_down, useful
+
+
+def angular_bounds(center, target, R: float, c: float):
+    """Theorem 1(3) bounds for the angular distance (reference only)."""
+    t2 = (np.asarray(center, np.float64) / np.asarray(target, np.float64)) ** 2
+    M, N = float(np.max(t2)), float(np.min(t2))
+    X = np.cos(R) + (N - M) / M
+    Y = M * np.cos(c * R) / N + (M - N) / N
+    r_up = np.arccos(max(-1.0, X))
+    cr_down = np.arccos(min(1.0, Y))
+    return r_up, cr_down

@@ -1,0 +1,5 @@
+"""Distribution substrate: sharding rules, fault tolerance."""
+
+from .sharding import named_sharding, shard, spec, with_rules
+
+__all__ = ["named_sharding", "shard", "spec", "with_rules"]

@@ -1,0 +1,102 @@
+"""Logical-axis sharding rules (FSDP + TP + EP + SP) for the model zoo.
+
+Every tensor dimension is tagged with a logical name; ``spec()`` maps names
+to mesh axes with a divisibility fallback (a dimension that does not divide
+by its mesh axes is replicated — e.g. musicgen's 24 heads on a 16-wide
+model axis).  Rules:
+
+  batch    -> ("pod", "data")     data parallel
+  fsdp     -> ("pod", "data")     parameter/optimizer sharding (ZeRO-3)
+  model    -> ("model",)          tensor parallel (Megatron column/row)
+  heads/kv_heads/ff/vocab/experts -> ("model",)
+  seq      -> ()                  (("pod","data") for seq-sharded KV caches)
+  layers/None -> replicated
+
+``with_rules`` overrides rules locally (e.g. long-context decode shards the
+KV-cache sequence over the data axes because batch == 1).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["spec", "shard", "named_sharding", "with_rules", "axis_size"]
+
+_DEFAULT_RULES: dict[str | None, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "model": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "seq": (),
+    "act_seq": ("model",),  # Megatron-SP residual stream between layers
+    "kv_seq": (),
+    "layers": (),
+    None: (),
+}
+
+_rules_stack: list[dict] = [dict(_DEFAULT_RULES)]
+
+
+def current_rules() -> dict:
+    return _rules_stack[-1]
+
+
+@contextlib.contextmanager
+def with_rules(**overrides):
+    new = dict(current_rules())
+    for k, v in overrides.items():
+        new[k] = tuple(v) if isinstance(v, (list, tuple)) else (v,)
+    _rules_stack.append(new)
+    try:
+        yield
+    finally:
+        _rules_stack.pop()
+
+
+def axis_size(mesh: Mesh, axes: Iterable[str]) -> int:
+    s = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            s *= mesh.shape[a]
+    return s
+
+
+def spec(mesh: Mesh, names: tuple[str | None, ...],
+         shape: tuple[int, ...] | None = None) -> P:
+    """PartitionSpec from logical dim names, with divisibility fallback."""
+    rules = current_rules()
+    parts = []
+    for i, name in enumerate(names):
+        axes = tuple(a for a in rules.get(name, ()) if a in mesh.axis_names)
+        if not axes:
+            parts.append(None)
+            continue
+        if shape is not None:
+            size = axis_size(mesh, axes)
+            if shape[i] % size != 0:
+                # replicate instead of uneven-sharding stacked/scanned dims
+                parts.append(None)
+                continue
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def named_sharding(mesh: Mesh, names, shape=None) -> NamedSharding:
+    return NamedSharding(mesh, spec(mesh, tuple(names), shape))
+
+
+def shard(x, mesh: Mesh | None, *names):
+    """with_sharding_constraint by logical names (no-op without mesh)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(mesh, names, tuple(x.shape))
+    )

@@ -1,0 +1,15 @@
+"""Distributed WLSH index runtime: sharded build + query engine."""
+
+from .builder import build_state, fold_center_weight, make_build_step
+from .config import IndexConfig
+from .engine import QueryState, make_query_step, query_input_specs
+
+__all__ = [
+    "IndexConfig",
+    "QueryState",
+    "build_state",
+    "fold_center_weight",
+    "make_build_step",
+    "make_query_step",
+    "query_input_specs",
+]

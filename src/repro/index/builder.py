@@ -1,0 +1,102 @@
+"""Distributed WLSH table build (the paper's Preprocess on a mesh).
+
+Points are sharded over the point axes; the hash encode is a plain sharded
+matmul (rows x replicated projection), so the build is embarrassingly
+parallel — XLA emits zero collectives for it.  The group's center weight
+and bucket width are *folded* into the projection once so that serving
+never touches them:
+
+    proj_folded = diag(W_center) @ A / w
+    codes       = floor(x @ proj_folded + b_frac) + b_int
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.families import LpFamilyParams
+from ..kernels import ops
+from .config import IndexConfig
+from .engine import QueryState, _point_axes
+
+__all__ = ["fold_center_weight", "make_build_step", "build_state", "build_input_specs"]
+
+
+def fold_center_weight(fam: LpFamilyParams) -> dict[str, np.ndarray]:
+    """Fold center weight + width into the projection (host-side, once)."""
+    proj = fam.proj.astype(np.float64) * fam.center_weight[:, None].astype(
+        np.float64
+    ) / fam.width
+    return dict(
+        proj=proj.astype(np.float32),
+        b_int=fam.b_int.astype(np.int32),
+        b_frac=fam.b_frac.astype(np.float32),
+        width=np.float32(1.0),
+    )
+
+
+def _build_fn(points, proj, b_int, b_frac, vec_dtype):
+    codes = ops.hash_encode(
+        points.astype(jnp.float32),
+        jnp.ones((points.shape[1],), jnp.float32),
+        proj,
+        b_int,
+        b_frac,
+        1.0,
+        use_pallas=False,  # sharded matmul: XLA path; Pallas on TPU shards
+    )
+    return codes, points.astype(vec_dtype)
+
+
+def make_build_step(mesh: Mesh, cfg: IndexConfig):
+    """jit'd sharded build: (points, proj, b_int, b_frac) -> (codes, vectors)."""
+    pa = _point_axes(mesh)
+    rows = NamedSharding(mesh, P(pa, None))
+    rep2 = NamedSharding(mesh, P(None, None))
+    rep1 = NamedSharding(mesh, P(None))
+    fn = functools.partial(_build_fn, vec_dtype=jnp.dtype(cfg.vec_dtype))
+    return jax.jit(
+        fn,
+        in_shardings=(rows, rep2, rep1, rep1),
+        out_shardings=(rows, rows),
+    )
+
+
+def build_input_specs(cfg: IndexConfig):
+    return dict(
+        points=jax.ShapeDtypeStruct((cfg.n, cfg.d), jnp.float32),
+        proj=jax.ShapeDtypeStruct((cfg.d, cfg.beta), jnp.float32),
+        b_int=jax.ShapeDtypeStruct((cfg.beta,), jnp.int32),
+        b_frac=jax.ShapeDtypeStruct((cfg.beta,), jnp.float32),
+    )
+
+
+def build_state(
+    mesh: Mesh, cfg: IndexConfig, points: np.ndarray, fam: LpFamilyParams
+) -> QueryState:
+    """Materialize a device-resident QueryState from host data (small/medium
+    scale path used by examples/tests; production feeds per-host shards)."""
+    folded = fold_center_weight(fam)
+    step = make_build_step(mesh, cfg)
+    codes, vecs = step(
+        jnp.asarray(points, jnp.float32),
+        jnp.asarray(folded["proj"]),
+        jnp.asarray(folded["b_int"]),
+        jnp.asarray(folded["b_frac"]),
+    )
+    rep2 = NamedSharding(mesh, P(None, None))
+    rep1 = NamedSharding(mesh, P(None))
+    return QueryState(
+        codes=codes,
+        points=vecs,
+        proj=jax.device_put(jnp.asarray(folded["proj"]), rep2),
+        b_int=jax.device_put(jnp.asarray(folded["b_int"]), rep1),
+        b_frac=jax.device_put(jnp.asarray(folded["b_frac"]), rep1),
+        width=jax.device_put(jnp.asarray(1.0, jnp.float32),
+                             NamedSharding(mesh, P())),
+    )

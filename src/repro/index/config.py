@@ -1,0 +1,39 @@
+"""Configuration for the distributed WLSH index engine."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Shapes + plan parameters for one table group served on a mesh.
+
+    Production-scale defaults correspond to the paper's regime scaled to a
+    TPU pod: ~1B points, SIFT-like d, beta from Eq. 11 at n=2^30.
+    """
+
+    n: int = 1 << 30  # points (global)
+    d: int = 128  # dimensions
+    beta: int = 128  # hash tables in the group (post-relaxation size)
+    q_batch: int = 64  # global query batch
+    k: int = 10
+    c: int = 2
+    n_levels: int = 24  # virtual-rehashing levels (0..n_levels)
+    p: float = 2.0
+    block_n: int = 1 << 15  # points per scan block (per shard); the per-
+    # block scoring working set is ~(q_batch x block_n x beta) x 4 bytes
+    # (the XLA-fallback eq-count materializes it) — 1 GB at the production
+    # config, next to the 2 GB/chip code shard
+    budget: int = 4096 + 10  # k + gamma*n (gamma=100/n paper default -> ~k+100;
+    # kept configurable because at 1B points a larger false-positive budget
+    # is the practical choice)
+    vec_dtype: str = "bfloat16"  # stored vectors (verification re-ranks in f32)
+    use_pallas: bool | None = None  # None = auto (TPU only)
+    analysis_unroll: bool = False  # unroll block/level loops so the dry-run
+    # cost analysis counts true work (XLA counts loop bodies once); used by
+    # launch/dryrun.py shallow analysis lowerings only
+
+    @property
+    def width_placeholder(self) -> float:
+        return 1.0

@@ -1,0 +1,297 @@
+"""Sharded WLSH query engine (the paper's Search, TPU-pod-native).
+
+Decomposition (DESIGN.md Sec. 4): point rows -- codes (n, beta) and vectors
+(n, d) -- are sharded over *every* mesh axis ("pod" x "data" x "model"), and
+the query batch is replicated.  Each chip scores all Q queries against its
+n/chips rows, so the (Q, n) work splits perfectly by rows while per-chip
+state stays 1/chips of the index.  At the 1B-point production config the
+codes alone are 2 TB: the first-cut layout (rows over ("pod","data") only,
+queries over "model") left the model axis holding replicas -- 128 GB/chip,
+8x over HBM.  Row-sharding over all axes was perf iteration #1, see
+EXPERIMENTS.md Sec. Perf.  The only communication is
+
+  * a psum of per-query level histograms, (Q, L+2) ints -- bytes, and
+  * an all-gather of per-shard top-k rows, (Q, k) -- bytes,
+
+both over all axes.  Per shard the engine streams its code/vector slabs
+through VMEM-sized blocks in two passes (lax.scan):
+
+  pass 1  codes -> freq_level -> per-level frequent/good histograms
+          -> psum -> the paper's stop conditions (k found / budget) -> j*
+  pass 2  codes + vectors -> masked distances (L_freq <= j*) -> running
+          local top-k -> all-gather -> global top-k
+
+Pass 2 recomputes L_freq instead of materializing the (Q, n_loc) int8
+matrix -- at beta/d ~ 4 this costs ~1.3x compute for ~0 bytes of HBM
+footprint; the single-pass per-level-candidate variant is evaluated in the
+perf log (EXPERIMENTS.md Sec. Perf).
+
+Every query carries its own weight vector, collision threshold mu and
+radius base r_min (the WLSH multi-weight semantics -- queries under
+*different* weighted distance functions batch together as long as they hit
+the same table group).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ops
+from .config import IndexConfig
+
+__all__ = ["QueryState", "make_query_step", "query_input_specs", "shardings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryState:
+    """Device-resident table-group state (a pytree)."""
+
+    codes: jax.Array  # (n, beta) int32, sharded (("pod","data"), None)
+    points: jax.Array  # (n, d) vec_dtype, sharded likewise
+    proj: jax.Array  # (d, beta) f32, replicated
+    b_int: jax.Array  # (beta,) int32, replicated
+    b_frac: jax.Array  # (beta,) f32, replicated
+    width: jax.Array  # () f32
+
+
+jax.tree_util.register_dataclass(
+    QueryState,
+    data_fields=["codes", "points", "proj", "b_int", "b_frac", "width"],
+    meta_fields=[],
+)
+
+
+def _point_axes(mesh: Mesh):
+    """Point rows shard over every mesh axis (see module docstring)."""
+    return tuple(mesh.axis_names)
+
+
+def shardings(mesh: Mesh):
+    pa = _point_axes(mesh)
+    return {
+        "state": QueryState(
+            codes=NamedSharding(mesh, P(pa, None)),
+            points=NamedSharding(mesh, P(pa, None)),
+            proj=NamedSharding(mesh, P(None, None)),
+            b_int=NamedSharding(mesh, P(None)),
+            b_frac=NamedSharding(mesh, P(None)),
+            width=NamedSharding(mesh, P()),
+        ),
+        "queries": NamedSharding(mesh, P(None, None)),
+        "q_meta": NamedSharding(mesh, P(None)),
+        "out": NamedSharding(mesh, P(None, None)),
+    }
+
+
+def _log_c(x, c: int):
+    return jnp.log(x) / math.log(c)
+
+
+def _per_query_l2(q, w, pts):
+    """(q_loc, B) weighted l2 with per-query weights, via two matmuls."""
+    w2 = w * w
+    qw2 = jnp.sum(w2 * q * q, axis=-1)  # (q,)
+    cross = (w2 * q) @ pts.T  # (q, B)
+    onorm = w2 @ (pts * pts).T  # (q, B)
+    d2 = qw2[:, None] - 2.0 * cross + onorm
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def _per_query_lp(q, w, pts, p: float):
+    diff = jnp.abs((q[:, None, :] - pts[None, :, :]) * w[:, None, :])
+    if abs(p - 1.0) < 1e-9:
+        return jnp.sum(diff, axis=-1)
+    return jnp.sum(diff**p, axis=-1) ** (1.0 / p)
+
+
+def _query_shard(
+    state: QueryState,
+    queries,  # (q_loc, d)
+    q_weight,  # (q_loc, d)
+    mu,  # (q_loc,) int32
+    r_min,  # (q_loc,) f32
+    beta_q,  # (q_loc,) int32 per-member beta_{W_i}
+    cfg: IndexConfig,
+    mesh_axes: tuple[str, ...],
+):
+    c, L, k = cfg.c, cfg.n_levels, cfg.k
+    n_loc = state.codes.shape[0]
+    block = min(cfg.block_n, n_loc)
+    n_blocks = n_loc // block
+    q_loc = queries.shape[0]
+    qf32 = queries.astype(jnp.float32)
+    wf32 = q_weight.astype(jnp.float32)
+
+    # state.proj is the *folded* projection (center weight and bucket width
+    # folded in at build time, builder.fold_center_weight), so both data and
+    # queries hash with unit weight/width.  q_weight is the per-query
+    # *distance* weight (the WLSH multi-weight semantics).
+    codes_q = ops.hash_encode(
+        qf32,
+        jnp.ones((cfg.d,), jnp.float32),
+        state.proj,
+        state.b_int,
+        state.b_frac,
+        1.0,
+        use_pallas=False,
+    )
+
+    codes_blocks = state.codes.reshape(n_blocks, block, cfg.beta)
+    point_blocks = state.points.reshape(n_blocks, block, cfg.d)
+
+    # ---- pass 1: level histograms -> stop level ---------------------------
+    def pass1(carry, blk):
+        hist_f, hist_g = carry
+        cb, pb = blk
+        lf = ops.freq_level(
+            cb, codes_q, mu, c=c, n_levels=L, beta_q=beta_q,
+            use_pallas=cfg.use_pallas, unroll=cfg.analysis_unroll,
+        )  # (q_loc, block)
+        if abs(cfg.p - 2.0) < 1e-9:
+            dist = _per_query_l2(qf32, wf32, pb.astype(jnp.float32))
+        else:
+            dist = _per_query_lp(qf32, wf32, pb.astype(jnp.float32), cfg.p)
+        jg = jnp.ceil(
+            jnp.maximum(_log_c(jnp.maximum(dist, 1e-30), c)
+                        - _log_c(c * r_min, c)[:, None], 0.0)
+        ).astype(jnp.int32)
+        good_lvl = jnp.maximum(lf, jg)
+        levels = jnp.arange(L + 2, dtype=jnp.int32)
+        hist_f = hist_f + jnp.sum(
+            (lf[:, :, None] == levels[None, None, :]).astype(jnp.int32), axis=1
+        )
+        hist_g = hist_g + jnp.sum(
+            (good_lvl[:, :, None] == levels[None, None, :]).astype(jnp.int32),
+            axis=1,
+        )
+        return (hist_f, hist_g), None
+
+    hist0 = jnp.zeros((q_loc, L + 2), jnp.int32)
+    (hist_f, hist_g), _ = jax.lax.scan(
+        pass1, (hist0, hist0), (codes_blocks, point_blocks),
+        unroll=n_blocks if cfg.analysis_unroll else 1,
+    )
+    hist_f = jax.lax.psum(hist_f, mesh_axes)
+    hist_g = jax.lax.psum(hist_g, mesh_axes)
+    nf_cum = jnp.cumsum(hist_f[:, : L + 1], axis=1)
+    ng_cum = jnp.cumsum(hist_g[:, : L + 1], axis=1)
+    cond = (ng_cum >= k) | (nf_cum >= cfg.budget)
+    stop = jnp.where(
+        jnp.any(cond, axis=1), jnp.argmax(cond, axis=1), jnp.int32(L)
+    ).astype(jnp.int32)  # (q_loc,)
+
+    # ---- pass 2: masked distances -> running local top-k ------------------
+    def pass2(carry, blk):
+        vals, idx = carry
+        cb, pb, boff = blk
+        lf = ops.freq_level(
+            cb, codes_q, mu, c=c, n_levels=L, beta_q=beta_q,
+            use_pallas=cfg.use_pallas, unroll=cfg.analysis_unroll,
+        )
+        if abs(cfg.p - 2.0) < 1e-9:
+            dist = _per_query_l2(qf32, wf32, pb.astype(jnp.float32))
+        else:
+            dist = _per_query_lp(qf32, wf32, pb.astype(jnp.float32), cfg.p)
+        scores = jnp.where(lf <= stop[:, None], dist, jnp.inf)
+        bvals, bidx = jax.lax.top_k(-scores, k)
+        bidx = bidx + boff
+        vals = jnp.concatenate([vals, -bvals], axis=1)
+        idx = jnp.concatenate([idx, bidx], axis=1)
+        mvals, mpos = jax.lax.top_k(-vals, k)
+        return (-mvals, jnp.take_along_axis(idx, mpos, axis=1)), None
+
+    shard_off = jnp.int32(0)
+    mul = 1
+    for ax in reversed(mesh_axes):
+        shard_off = shard_off + jax.lax.axis_index(ax) * mul
+        mul *= jax.lax.axis_size(ax)
+    shard_off = shard_off * n_loc
+    boffs = shard_off + jnp.arange(n_blocks, dtype=jnp.int32) * block
+    init = (
+        jnp.full((q_loc, k), jnp.inf, jnp.float32),
+        jnp.full((q_loc, k), -1, jnp.int32),
+    )
+    (vals, idx), _ = jax.lax.scan(
+        pass2, init, (codes_blocks, point_blocks, boffs),
+        unroll=n_blocks if cfg.analysis_unroll else 1,
+    )
+
+    # ---- global top-k merge ------------------------------------------------
+    gv = jax.lax.all_gather(vals, mesh_axes, tiled=False)  # (S, q_loc, k)
+    gi = jax.lax.all_gather(idx, mesh_axes, tiled=False)
+    S = gv.shape[0]
+    gv = jnp.moveaxis(gv, 0, 1).reshape(q_loc, S * k)
+    gi = jnp.moveaxis(gi, 0, 1).reshape(q_loc, S * k)
+    fvals, fpos = jax.lax.top_k(-gv, k)
+    fidx = jnp.take_along_axis(gi, fpos, axis=1)
+    n_checked = jnp.take_along_axis(nf_cum, stop[:, None], axis=1)[:, 0]
+    return -fvals, fidx, stop, n_checked
+
+
+def make_query_step(mesh: Mesh, cfg: IndexConfig):
+    """jit'd sharded query step: (state, queries, q_weight, mu, r_min) ->
+    (dists (Q,k), ids (Q,k), stop (Q,), n_checked (Q,))."""
+    pa = _point_axes(mesh)
+    sh = shardings(mesh)
+
+    fn = functools.partial(_query_shard, cfg=cfg, mesh_axes=pa)
+    smapped = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(
+            QueryState(
+                codes=P(pa, None),
+                points=P(pa, None),
+                proj=P(None, None),
+                b_int=P(None),
+                b_frac=P(None),
+                width=P(),
+            ),
+            P(None, None),
+            P(None, None),
+            P(None),
+            P(None),
+            P(None),
+        ),
+        out_specs=(P(None, None), P(None, None), P(None), P(None)),
+        check_vma=False,
+    )
+    return jax.jit(
+        smapped,
+        in_shardings=(
+            sh["state"],
+            sh["queries"],
+            sh["queries"],
+            sh["q_meta"],
+            sh["q_meta"],
+            sh["q_meta"],
+        ),
+        out_shardings=(sh["out"], sh["out"], sh["q_meta"], sh["q_meta"]),
+    )
+
+
+def query_input_specs(cfg: IndexConfig):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    vec = jnp.dtype(cfg.vec_dtype)
+    state = QueryState(
+        codes=jax.ShapeDtypeStruct((cfg.n, cfg.beta), jnp.int32),
+        points=jax.ShapeDtypeStruct((cfg.n, cfg.d), vec),
+        proj=jax.ShapeDtypeStruct((cfg.d, cfg.beta), jnp.float32),
+        b_int=jax.ShapeDtypeStruct((cfg.beta,), jnp.int32),
+        b_frac=jax.ShapeDtypeStruct((cfg.beta,), jnp.float32),
+        width=jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return dict(
+        state=state,
+        queries=jax.ShapeDtypeStruct((cfg.q_batch, cfg.d), jnp.float32),
+        q_weight=jax.ShapeDtypeStruct((cfg.q_batch, cfg.d), jnp.float32),
+        mu=jax.ShapeDtypeStruct((cfg.q_batch,), jnp.int32),
+        r_min=jax.ShapeDtypeStruct((cfg.q_batch,), jnp.float32),
+        beta_q=jax.ShapeDtypeStruct((cfg.q_batch,), jnp.int32),
+    )

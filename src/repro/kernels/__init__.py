@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the WLSH hot spots the paper optimizes:
+
+  hash_encode  — fused weighted projection + bucket quantization (MXU matmul
+                 with floor/offset epilogue); the Preprocess hot loop.
+  freq_level   — fused multi-level collision counting: the C2LSH virtual-
+                 rehashing search collapsed into one VMEM-resident sweep
+                 returning the first frequent level per (query, point).
+  weighted_lp  — candidate scoring for fractional/l_1 distances (p == 2 is
+                 routed to a norms+matmul expansion instead).
+
+``ops`` exposes jit'd padded wrappers with a pure-jnp fallback; ``ref``
+holds the oracles every kernel is tested against (interpret=True on CPU).
+"""
+
+from .ops import freq_level, hash_encode, on_tpu, weighted_lp_dist
+
+__all__ = ["freq_level", "hash_encode", "on_tpu", "weighted_lp_dist"]

@@ -1,0 +1,134 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op pads inputs to kernel block multiples, dispatches to the Pallas
+kernel (interpret=True off-TPU so the same kernel body runs everywhere),
+and masks the padding out of the result.  ``use_pallas=False`` routes to the
+pure-jnp oracle in ref.py — the default on CPU hosts for speed (interpret
+mode executes the kernel body per grid cell in Python); the sharded engine
+flips it on TPU.
+
+p == 2 distance scoring always uses the norms+matmul expansion (MXU beats
+any elementwise kernel for the quadratic case); the Pallas path serves the
+fractional/l_1 distances the paper targets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .freq_level import freq_level_pallas
+from .hash_encode import hash_encode_pallas
+from .weighted_lp import weighted_lp_pallas
+
+__all__ = ["hash_encode", "freq_level", "weighted_lp_dist", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult: int, axis: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def hash_encode(
+    points,
+    weight,
+    proj,
+    b_int,
+    b_frac,
+    width: float,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    bn: int = 256,
+    bb: int = 128,
+    bd: int = 256,
+):
+    """(n, beta) int32 level-1 bucket codes."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if not use_pallas:
+        return ref.hash_encode_ref(points, proj, b_int, b_frac, weight, width)
+    if interpret is None:
+        interpret = not on_tpu()
+    n, d = points.shape
+    beta = proj.shape[1]
+    pts = _pad_to(_pad_to(points, bn, 0), bd, 1)
+    w = _pad_to(weight, bd, 0)
+    a = _pad_to(_pad_to(proj, bd, 0), bb, 1)
+    bi = _pad_to(b_int, bb, 0)
+    bf = _pad_to(b_frac, bb, 0)
+    out = hash_encode_pallas(
+        pts, w, a, bi, bf, width, bn=bn, bb=bb, bd=bd, interpret=interpret
+    )
+    return out[:n, :beta]
+
+
+def freq_level(
+    codes_p,
+    codes_q,
+    mu,
+    c: int,
+    n_levels: int,
+    beta_q=None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    bn: int = 256,
+    unroll: bool = False,
+):
+    """(Q, n) int32 first-frequent-level matrix (n_levels+1 = never)."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    q = codes_q.shape[0]
+    mu = jnp.broadcast_to(jnp.asarray(mu, jnp.int32), (q,))
+    if beta_q is None:
+        beta_q = jnp.full((q,), codes_p.shape[1], jnp.int32)
+    beta_q = jnp.broadcast_to(jnp.asarray(beta_q, jnp.int32), (q,))
+    if not use_pallas:
+        return ref.freq_level_ref(codes_p, codes_q, mu, c, n_levels, beta_q,
+                                  unroll=unroll)
+    if interpret is None:
+        interpret = not on_tpu()
+    n = codes_p.shape[0]
+    cp = _pad_to(codes_p, bn, 0, value=jnp.iinfo(jnp.int32).max // 2)
+    out = freq_level_pallas(
+        cp, codes_q, mu, beta_q, c=c, n_levels=n_levels, bn=bn,
+        interpret=interpret,
+    )
+    return out[:, :n]
+
+
+def weighted_lp_dist(
+    queries,
+    points,
+    weight,
+    p: float,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    bn: int = 256,
+    bd: int = 256,
+):
+    """(Q, n) f32 weighted l_p distances."""
+    if abs(p - 2.0) < 1e-9 or use_pallas is False or (
+        use_pallas is None and not on_tpu()
+    ):
+        return ref.weighted_lp_ref(queries, points, weight, p)
+    if interpret is None:
+        interpret = not on_tpu()
+    qn, d = queries.shape
+    n = points.shape[0]
+    q = _pad_to(queries, bd, 1)
+    x = _pad_to(_pad_to(points, bn, 0), bd, 1)
+    w = _pad_to(weight, bd, 0)
+    out = weighted_lp_pallas(q, x, w, p=p, bn=bn, bd=bd, interpret=interpret)
+    return out[:, :n]

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match them exactly (integer
+outputs) or to float tolerance (distances).  Shapes:
+
+  hash_encode_ref : (n, d) x (d, beta) -> (n, beta) int32 bucket codes
+  freq_level_ref  : (n, beta) codes x (Q, beta) query codes -> (Q, n) int32
+                    first level j (0..n_levels) at which the point is
+                    *frequent* for the query (collision count >= mu at
+                    level-c^j buckets); n_levels + 1 if never frequent.
+  count_level_ref : collision counts at one fixed level (faithful C2LSH)
+  weighted_lp_ref : (Q, d) x (n, d) -> (Q, n) distances under weight W
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "hash_encode_ref",
+    "freq_level_ref",
+    "count_level_ref",
+    "weighted_lp_ref",
+]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hash_encode_ref(points, proj, b_int, b_frac, weight, width):
+    """floor((a . (W o x))/w + b_frac) + b_int, exact-int split of b*."""
+    x = points.astype(jnp.float32) * weight.astype(jnp.float32)
+    u = (x @ proj.astype(jnp.float32)) / width + b_frac
+    return jnp.floor(u).astype(jnp.int32) + b_int.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "n_levels", "unroll"))
+def _freq_level_ref(codes_p, codes_q, mu, beta_q, c: int, n_levels: int,
+                    unroll: bool = False):
+    never = jnp.int32(n_levels + 1)
+    out = jnp.full((codes_q.shape[0], codes_p.shape[0]), never, jnp.int32)
+    a = codes_p.astype(jnp.int32)  # (n, beta)
+    b = codes_q.astype(jnp.int32)  # (Q, beta)
+    lane = jnp.arange(a.shape[1], dtype=jnp.int32)
+    lane_ok = (lane[None, :] < beta_q[:, None]).astype(jnp.int32)  # (Q, beta)
+
+    def body(j, carry):
+        a, b, out = carry
+        cnt = jnp.sum(
+            (b[:, None, :] == a[None, :, :]).astype(jnp.int32)
+            * lane_ok[:, None, :],
+            axis=-1,
+        )  # (Q, n)
+        hit = (cnt >= mu[:, None]) & (out == never)
+        out = jnp.where(hit, jnp.int32(j), out)
+        return (jnp.floor_divide(a, c), jnp.floor_divide(b, c), out)
+
+    carry = (a, b, out)
+    if unroll:  # analysis: cost_analysis counts loop bodies once
+        for j in range(n_levels + 1):
+            carry = body(j, carry)
+        return carry[2]
+    a, b, out = jax.lax.fori_loop(0, n_levels + 1, body, carry)
+    return out
+
+
+def freq_level_ref(codes_p, codes_q, mu, c: int, n_levels: int, beta_q=None,
+                   unroll: bool = False):
+    """First frequent level per (query, point); fuses all C2LSH radii.
+
+    ``mu`` may be a scalar or (Q,); ``beta_q`` optionally limits each query
+    to its first beta_q hash tables (WLSH per-member beta_{W_i} semantics;
+    default = all tables).
+    """
+    q = codes_q.shape[0]
+    mu_arr = jnp.broadcast_to(jnp.asarray(mu, jnp.int32), (q,))
+    if beta_q is None:
+        beta_q = jnp.full((q,), codes_p.shape[1], jnp.int32)
+    beta_arr = jnp.broadcast_to(jnp.asarray(beta_q, jnp.int32), (q,))
+    return _freq_level_ref(codes_p, codes_q, mu_arr, beta_arr, int(c),
+                           int(n_levels), unroll=unroll)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "level"))
+def count_level_ref(codes_p, codes_q, c: int, level: int):
+    """Collision counts at level c**level (paper-faithful single radius)."""
+    l = c**level
+    a = jnp.floor_divide(codes_p.astype(jnp.int32), l)
+    b = jnp.floor_divide(codes_q.astype(jnp.int32), l)
+    return jnp.sum((b[:, None, :] == a[None, :, :]).astype(jnp.int32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def weighted_lp_ref(queries, points, weight, p: float):
+    """(Q, n) weighted l_p distances, f32."""
+    qw = queries.astype(jnp.float32) * weight
+    pw = points.astype(jnp.float32) * weight
+    if abs(p - 2.0) < 1e-9:
+        qq = jnp.sum(qw * qw, axis=-1)
+        pp = jnp.sum(pw * pw, axis=-1)
+        cross = qw @ pw.T
+        d2 = qq[:, None] + pp[None, :] - 2.0 * cross
+        return jnp.sqrt(jnp.maximum(d2, 0.0))
+    diff = jnp.abs(qw[:, None, :] - pw[None, :, :])
+    if abs(p - 1.0) < 1e-9:
+        return jnp.sum(diff, axis=-1)
+    return jnp.sum(diff**p, axis=-1) ** (1.0 / p)

@@ -1,0 +1,227 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = collective_wire_bytes / (chips x 50 GB/s link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+parsed from the post-SPMD ``compiled.as_text()`` (per-device shapes): for
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction we take its result bytes, x2 for all-reduce
+(ring RS+AG), and treat the sum as per-chip wire traffic.  Instructions
+whose replica_groups only cross the "pod" axis are additionally reported as
+DCN bytes.
+
+``cost_analysis()`` on a partitioned module reports per-device numbers;
+MODEL_FLOPS / HLO_FLOPs (x chips) is the useful-compute fraction — it
+catches remat recompute and padding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+__all__ = ["HW", "collective_bytes", "analyze", "RooflineResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip (TPU v5e-like)
+    hbm_bw: float = 819e9  # bytes/s / chip
+    link_bw: float = 50e9  # bytes/s / link (ICI)
+    dcn_bw: float = 6.25e9  # bytes/s / chip (inter-pod, ~50 Gbit)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+) = ")
+
+
+def _shape_bytes(shape_str: str, f32_as_bf16: bool = False) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes = _DTYPE_BYTES[dt]
+        if f32_as_bf16 and dt == "f32":
+            nbytes = 2
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind (see module docstring).
+
+    CPU-backend bf16 correction: the CPU has no native bf16 dot, so XLA
+    wraps every bf16 matmul operand in a convert-to-f32 — and SPMD then
+    places activation collectives on the *converted f32* values, doubling
+    their apparent wire bytes.  On TPU (the target) the MXU consumes bf16
+    and those collectives stay bf16.  When a collective's operands are
+    produced by convert(-fusion) ops we therefore count f32 payloads at
+    2 bytes/element; the uncorrected sum is reported alongside
+    (``total_raw``).
+    """
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    out_raw = dict(out)
+    counts = dict.fromkeys(out, 0)
+    lines = hlo_text.splitlines()
+    producer: dict[str, str] = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            producer[m.group(1)] = line
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        # skip the "-done" halves of async pairs (same bytes as -start)
+        if "-done(" in line:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        operands = [o.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                    for o in m.group(4).split(",") if o.strip()]
+        from_convert = bool(operands) and all(
+            "convert" in o or "convert" in producer.get(o, "")[:160]
+            for o in operands
+        )
+        factor = 2 if kind == "all-reduce" else 1
+        out[kind] += _shape_bytes(shape_str, f32_as_bf16=from_convert) * factor
+        out_raw[kind] += _shape_bytes(shape_str) * factor
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total": int(sum(out.values())),
+            "total_raw": int(sum(out_raw.values()))}
+
+
+@dataclasses.dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_detail: dict
+    model_flops: float  # global useful FLOPs (6*N*D style estimate)
+    memory: dict  # memory_analysis numbers (per device)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self, hw: HW = HW()):
+        self.compute_s = self.hlo_flops_per_chip / hw.peak_flops
+        self.memory_s = self.hlo_bytes_per_chip / hw.hbm_bw
+        self.collective_s = self.coll_bytes_per_chip / hw.link_bw
+        return self
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful FLOPs/s at roofline step time vs peak (the MFU bound)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / t) / (self.chips * HW().peak_flops)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            bottleneck=self.bottleneck,
+            useful_fraction=self.useful_fraction,
+            step_time_s=self.step_time_s,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def analyze(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    compiled,
+    model_flops: float,
+    hw: HW = HW(),
+    terms: dict | None = None,
+) -> RooflineResult:
+    """``terms`` overrides the raw cost_analysis numbers with the unrolled
+    two-point extrapolation from dryrun.analysis_terms — required for any
+    module containing loops (cost_analysis counts loop bodies once)."""
+    if terms is not None:
+        flops, byts = terms["flops"], terms["bytes"]
+        coll = {"total": terms["coll"],
+                "bytes": terms.get("coll_detail", {}),
+                "counts": {}}
+    else:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older jax returns [dict]
+            cost = cost[0]
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+        coll = collective_bytes(compiled.as_text())
+    try:
+        ma = compiled.memory_analysis()
+        memory = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+        memory["total_bytes"] = (
+            memory["argument_bytes"] + memory["temp_bytes"]
+        )
+    except Exception as e:  # pragma: no cover
+        memory = {"error": str(e)}
+    return RooflineResult(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=byts,
+        coll_bytes_per_chip=float(coll["total"]),
+        coll_detail=coll,
+        model_flops=model_flops,
+        memory=memory,
+    ).finalize(hw)

@@ -1,0 +1,393 @@
+"""Transformer building blocks: norms, rotary, GQA attention (blockwise
+online-softmax for train/prefill, cache attention for decode), SwiGLU MLP,
+embeddings, chunked cross-entropy.
+
+All forwards take (params, x, cfg, mesh) and annotate activations with
+logical-axis sharding constraints; weights follow Megatron column/row
+splits over the "model" axis with FSDP over ("pod","data") (see
+distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .params import pdef
+
+NEG_INF = -1.0e30
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+
+def norm_defs(cfg: ModelConfig):
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    return {"scale": pdef((cfg.d_model,), (None,), init="ones")}
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    """Statistics in f32, the (B,S,d)-sized products in x.dtype (the f32
+    path would double every downstream activation collective)."""
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "nonparametric_ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        inv = jax.lax.rsqrt(var + eps)
+        return (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# rotary
+# ----------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: (..., S).
+
+    Angles in f32, the rotation itself in x.dtype: promoting the (B,S,H,dh)
+    products to f32 doubles every downstream activation collective (the
+    f32[B,S,d] all-gathers measured in EXPERIMENTS.md Sec Perf).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+
+
+# ----------------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig):
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "wq": pdef((d, h * dh), ("fsdp", "heads"), init="scaled"),
+        "wk": pdef((d, kvh * dh), ("fsdp", "kv_heads"), init="scaled"),
+        "wv": pdef((d, kvh * dh), ("fsdp", "kv_heads"), init="scaled"),
+        "wo": pdef((h * dh, d), ("heads", "fsdp"), init="scaled"),
+    }
+
+
+def _qkv(params, x, cfg: ModelConfig, mesh, positions):
+    B, S, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, h, dh)
+    k = (x @ params["wk"].astype(dt)).reshape(B, S, kvh, dh)
+    v = (x @ params["wv"].astype(dt)).reshape(B, S, kvh, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, mesh, "batch", "seq", "heads", None)
+    k = shard(k, mesh, "batch", "seq", "kv_heads", None)
+    v = shard(v, mesh, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def blockwise_attention(
+    q, k, v, cfg: ModelConfig, q_offset: int = 0,
+    block_q: int = 512, block_kv: int = 512,
+    causal_block_skip: bool = False,
+    unroll: bool = False,
+):
+    """Online-softmax causal (optionally sliding-window) attention.
+
+    q (B,S,H,dh), k/v (B,Sk,KVH,dh) -> (B,S,H,dh).  Memory O(S*block) —
+    never materializes the (S, Sk) score matrix *in either direction*: the
+    kv scan body is checkpointed, so the backward recomputes per-block
+    scores from q/k/v instead of keeping the (nk, B, S, H, bk) stack the
+    scan's autodiff would otherwise save (the flash-attention backward
+    trade; the stack measured ~3 GB/chip on moonshot train_4k).
+    ``causal_block_skip`` (perf iteration, EXPERIMENTS.md Sec Perf) skips
+    fully-masked kv blocks instead of masking them.  ``unroll`` fully
+    unrolls the kv scan — analysis-only (cost_analysis counts while-loop
+    bodies once; launch/dryrun.py lowers unrolled shallow variants).
+    """
+    B, S, H, dh = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    bq = min(block_q, S)
+    bk = min(block_kv, Sk)
+    nq, nk = S // bq, Sk // bk
+    scale = 1.0 / math.sqrt(dh)
+
+    qb = q.reshape(B, nq, bq, KVH, G, dh)
+    kb = k.reshape(B, nk, bk, KVH, dh)
+    vb = v.reshape(B, nk, bk, KVH, dh)
+    qpos = q_offset + jnp.arange(S).reshape(nq, bq)
+    kpos = jnp.arange(Sk).reshape(nk, bk)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def kv_step(carry, j):
+        m, l, acc = carry  # (B,nq,bq,KVH,G), same, (B,nq,bq,KVH,G,dh)
+        kj = jnp.take(kb, j, axis=1)  # (B,bk,KVH,dh)
+        vj = jnp.take(vb, j, axis=1)
+        s = jnp.einsum(
+            "bnqkgd,bpkd->bnqkgp", qb, kj,
+            preferred_element_type=jnp.float32,
+        ) * scale  # (B,nq,bq,KVH,G,bk)
+        kp = jnp.take(kpos, j, axis=0)  # (bk,)
+        mask = qpos[None, :, :, None, None, None] >= kp[None, None, None,
+                                                        None, None, :]
+        if cfg.sliding_window:
+            mask &= (
+                qpos[None, :, :, None, None, None]
+                - kp[None, None, None, None, None, :]
+            ) < cfg.sliding_window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bnqkgp,bpkd->bnqkgd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, bq, KVH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, bq, KVH, G), jnp.float32)
+    a0 = jnp.zeros((B, nq, bq, KVH, G, dh), jnp.float32)
+
+    if causal_block_skip and q_offset == 0 and S == Sk:
+        # process only kv blocks j <= i per q block: restructure as a scan
+        # over diagonals is complex; instead unroll per q-block row.
+        outs = []
+        for i in range(nq):
+            row_q = qb[:, i : i + 1]
+            mi = m0[:, : 1]
+            li = l0[:, : 1]
+            ai = a0[:, : 1]
+            hi = i + 1 if not cfg.sliding_window else max(
+                0, i - cfg.sliding_window // bk
+            )
+            lo = 0 if not cfg.sliding_window else max(
+                0, i - (cfg.sliding_window + bq) // bk
+            )
+            carry = (mi, li, ai)
+            sub_q = qpos[i : i + 1]
+
+            def kv_step_row(carry, j, row_q=row_q, sub_q=sub_q):
+                m, l, acc = carry
+                kj = jnp.take(kb, j, axis=1)
+                vj = jnp.take(vb, j, axis=1)
+                s = jnp.einsum(
+                    "bnqkgd,bpkd->bnqkgp", row_q, kj,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                kp = jnp.take(kpos, j, axis=0)
+                mask = sub_q[None, :, :, None, None, None] >= kp[
+                    None, None, None, None, None, :
+                ]
+                if cfg.sliding_window:
+                    mask &= (
+                        sub_q[None, :, :, None, None, None]
+                        - kp[None, None, None, None, None, :]
+                    ) < cfg.sliding_window
+                s = jnp.where(mask, s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + jnp.sum(p, axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bnqkgp,bpkd->bnqkgd", p.astype(vj.dtype), vj,
+                    preferred_element_type=jnp.float32,
+                )
+                return (m_new, l_new, acc_new), None
+
+            (mi, li, ai), _ = jax.lax.scan(
+                kv_step_row, carry, jnp.arange(lo, i + 1)
+            )
+            outs.append(ai / jnp.maximum(li[..., None], 1e-30))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk),
+            unroll=nk if unroll else 1,
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def attention(params, x, cfg: ModelConfig, mesh, positions,
+              causal_block_skip: bool = False, unroll: bool = False):
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, mesh, positions)
+    out = blockwise_attention(
+        q, k, v, cfg, causal_block_skip=causal_block_skip, unroll=unroll
+    )
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim_)
+    y = out @ params["wo"].astype(x.dtype)
+    return shard(y, mesh, "batch", "seq", None)
+
+
+def decode_attention(params, x, cfg: ModelConfig, mesh, cache_k, cache_v,
+                     position):
+    """Single-token decode against a (B, S_cache, KVH_store, dh) cache.
+
+    Returns (y, k_new, v_new) — cache update handled by the caller (ring
+    buffer for SWA).  The (B,H,S_cache) score tensor is small for one token
+    and shards over (batch|kv_seq, heads).
+
+    KVH_store may be ``rep x n_kv_heads`` (rep = cache_k.shape[2] // kvh):
+    when kv_heads < the "model" axis, the cache stores each kv head
+    replicated rep times so the head dim shards (the vLLM/Megatron GQA-TP
+    trick; a 2x-replicated cache sharded 16 ways beats an unsharded one
+    8x over — see EXPERIMENTS.md Sec Perf, chameleon decode).  Query head
+    i attends stored head i // (G/rep), which is exactly the layout the
+    (B, KVH_store, G/rep, dh) reshape below produces.
+    """
+    B = x.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    kvh_store = cache_k.shape[2]
+    rep = kvh_store // kvh
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, 1, h, dh)
+    k = (x @ params["wk"].astype(dt)).reshape(B, 1, kvh, dh)
+    v = (x @ params["wv"].astype(dt)).reshape(B, 1, kvh, dh)
+    pos = jnp.broadcast_to(position, (B, 1))
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    G = h // kvh_store
+    qg = q.reshape(B, kvh_store, G, dh)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, cache_k.astype(dt),
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(dh)
+    Sc = cache_k.shape[1]
+    kpos = jnp.arange(Sc)
+    if cfg.sliding_window and Sc <= cfg.sliding_window:
+        # ring buffer: all slots hold live positions once the window filled
+        valid = (kpos[None, None, None, :] < position) | (
+            position >= cfg.sliding_window
+        )
+    else:
+        valid = kpos[None, None, None, :] < position
+    s = jnp.where(valid, s, NEG_INF)
+    # include the current token via the online-softmax merge
+    s_self = jnp.einsum(
+        "bkgd,bkd->bkg", qg, k[:, 0].astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    )[..., None] / math.sqrt(dh)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), s_self)
+    p = jnp.exp(s - m)
+    p_self = jnp.exp(s_self - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True) + p_self
+    ctx = jnp.einsum(
+        "bkgs,bskd->bkgd", p.astype(dt), cache_v.astype(dt),
+        preferred_element_type=jnp.float32,
+    ) + p_self * v[:, 0][:, :, None, :]
+    ctx = (ctx / denom).astype(dt)
+    y = ctx.reshape(B, h * dh) @ params["wo"].astype(dt)
+    return shard(y, mesh, "batch", None), k[:, 0], v[:, 0]
+
+
+# ----------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ----------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ModelConfig, ff: int | None = None):
+    d = cfg.d_model
+    ff = ff or cfg.d_ff
+    return {
+        "wg": pdef((d, ff), ("fsdp", "ff"), init="scaled"),
+        "wu": pdef((d, ff), ("fsdp", "ff"), init="scaled"),
+        "wd": pdef((ff, d), ("ff", "fsdp"), init="scaled"),
+    }
+
+
+def mlp(params, x, mesh):
+    dt = x.dtype
+    h = jax.nn.silu(x @ params["wg"].astype(dt)) * (x @ params["wu"].astype(dt))
+    h = shard(h, mesh, "batch", "seq", "ff")
+    y = h @ params["wd"].astype(dt)
+    return shard(y, mesh, "batch", "seq", None)
+
+
+# ----------------------------------------------------------------------------
+# embeddings + loss
+# ----------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ModelConfig):
+    out = {"tok": pdef((cfg.vocab, cfg.d_model), ("vocab", "fsdp"))}
+    if not cfg.tie_embeddings:
+        out["unembed"] = pdef(
+            (cfg.d_model, cfg.vocab), ("fsdp", "vocab"), init="scaled"
+        )
+    return out
+
+
+def embed(params, tokens, cfg: ModelConfig, mesh):
+    x = jnp.take(params["tok"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return shard(x, mesh, "batch", "seq", None)
+
+
+def unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["tok"].T
+    return params["unembed"]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _ce_chunk(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll
+
+
+def chunked_ce_loss(params, x, labels, cfg: ModelConfig, mesh,
+                    chunk: int = 512, unroll: bool = False):
+    """Cross-entropy with the (B,S,V) logits computed seq-chunk at a time.
+
+    The scan body is rematerialized: without it, autodiff saves every
+    chunk's logits for the backward pass — the full (B,S,V) f32 tensor the
+    chunking exists to avoid (2.5 GB/chip on moonshot train_4k, measured;
+    see EXPERIMENTS.md Sec Perf).  Recomputing logits in the backward costs
+    one extra (B,S,D)x(D,V) matmul — the standard trade.
+    """
+    B, S, D = x.shape
+    W = unembed_matrix(params, cfg).astype(x.dtype)
+    chunk = min(chunk, S)
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, blk):
+        xb, lb = blk
+        logits = xb @ W  # (B, chunk, V)
+        logits = shard(logits, mesh, "batch", "seq", "vocab")
+        loss = _ce_chunk(logits, lb)
+        return carry + jnp.sum(loss), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, lc),
+                            unroll=nc if unroll else 1)
+    return total / (B * S)

@@ -1,0 +1,84 @@
+"""Model factory + per-(arch, shape) input specs for lowering and smoke runs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .transformer import Model, RunFlags
+
+__all__ = ["build_model", "input_specs", "make_batch"]
+
+
+def build_model(cfg: ModelConfig, mesh=None, flags: RunFlags | None = None):
+    if flags is None:
+        flags = default_flags(cfg)
+    return Model(cfg, mesh=mesh, flags=flags)
+
+
+def _best_group(n: int) -> int:
+    """Divisor of n closest to sqrt(n): balances boundary count (n/g)
+    against live recompute window (g) under nested remat."""
+    import math
+
+    target = max(1, math.isqrt(n))
+    divisors = [d for d in range(1, n + 1) if n % d == 0]
+    return min(divisors, key=lambda d: abs(d - target))
+
+
+def default_flags(cfg: ModelConfig) -> RunFlags:
+    groups = 1
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    # nested remat for very wide stacks (llama3-405b, chameleon-34b): saved
+    # layer boundaries at full width would blow HBM.
+    if cfg.d_model >= 8192 and n_scan > 8:
+        groups = _best_group(n_scan)
+    return RunFlags(remat="full", layer_groups=groups)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this step kind.
+
+    * train/prefill: token ids (or stub frontend embeddings for audio/vlm,
+      per the assignment: the modality frontend provides precomputed
+      frame/patch embeddings) + labels.
+    * decode: one new token per sequence + scalar position; the KV/SSM cache
+      is part of the step state, shaped for ``shape.seq_len``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        out = {}
+        if cfg.input_mode == "embeddings":
+            out["embeddings"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return out
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Materialized random batch matching input_specs (smoke tests)."""
+    key = jax.random.PRNGKey(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            if s.shape == ():
+                out[name] = jnp.asarray(shape.seq_len // 2, s.dtype)
+            else:
+                out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab,
+                                               dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(
+                s.dtype
+            )
+    return out

@@ -1,0 +1,238 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based dispatch.
+
+Two implementations sharing the same routing math:
+
+* ``_moe_block_global`` — single-device / mesh-free reference: one global
+  argsort over all (token, k) assignments, GShard-free dispatch into an
+  (E, C, d) buffer.  Used for CPU smoke tests and as the recorded baseline
+  in EXPERIMENTS.md Sec. Perf (under pjit it replicates the dispatch
+  buffers: ~400 GB/chip on olmoe train_4k — the measured pathology the EP
+  path fixes).
+
+* ``_moe_block_ep`` — the production path: ``shard_map`` over the mesh.
+  Tokens stay local to their ("pod","data") shard, experts are sliced over
+  "model" (EP).  Dispatch is pure local integer work: assignments are
+  argsorted by expert id *per shard*, each shard keeps only the slots of
+  its E/mp local experts, and the (e_loc*C, d) dispatch/combine buffers are
+  built by scatter/gather of *int32 slot ids* (the (T*K, d) gather of the
+  naive formulation never materializes).  The only communication is one
+  psum of the (T_loc, d) combined output over the "model" axis per layer —
+  the same wire cost a Megatron TP MLP pays.  Dropping is per-data-shard
+  (capacity C = ceil(T_loc * top_k / E * capacity_factor)), the
+  locality-aware choice real EP systems make.
+
+Shared experts (DeepSeek/Moonlight style) are plain MLPs added to the
+routed output.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .layers import mlp, mlp_defs
+from .params import pdef
+
+__all__ = ["moe_defs", "moe_block", "capacity"]
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for tiling
+
+
+def moe_defs(cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    out = {
+        "router": pdef((d, e), ("fsdp", None), init="scaled"),
+        "wg": pdef((e, d, ff), ("experts", "fsdp", None), init="scaled"),
+        "wu": pdef((e, d, ff), ("experts", "fsdp", None), init="scaled"),
+        "wd": pdef((e, ff, d), ("experts", None, "fsdp"), init="scaled"),
+    }
+    if cfg.n_shared_experts:
+        out["shared"] = mlp_defs(cfg, ff=cfg.d_ff * cfg.n_shared_experts)
+    return out
+
+
+def _route(xt, router, cfg: ModelConfig):
+    """Top-k routing: returns (sorted assignment arrays, capacity-free)."""
+    T = xt.shape[0]
+    K = cfg.top_k
+    logits = (xt @ router).astype(jnp.float32)
+    gate, sel = jax.lax.top_k(logits, K)  # (T, K)
+    gate = jax.nn.softmax(gate, axis=-1)
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    exp_ids = sel.reshape(-1).astype(jnp.int32)  # (T*K,)
+    gates = gate.reshape(-1)
+    order = jnp.argsort(exp_ids, stable=True)
+    exp_sorted = exp_ids[order]
+    tok_sorted = tok_ids[order]
+    gate_sorted = gates[order]
+    counts = jnp.bincount(exp_ids, length=cfg.n_experts)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * K, dtype=jnp.int32) - starts[exp_sorted]
+    return exp_sorted, tok_sorted, gate_sorted, pos_in_e
+
+
+# ---------------------------------------------------------------------------
+# reference / mesh-free path
+# ---------------------------------------------------------------------------
+
+
+def _moe_block_global(params, x, cfg: ModelConfig, mesh):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    T = B * S
+    xt = x.reshape(T, d)
+    E = cfg.n_experts
+    C = capacity(T, cfg)
+
+    exp_sorted, tok_sorted, gate_sorted, pos_in_e = _route(
+        xt, params["router"].astype(dt), cfg
+    )
+    keep = pos_in_e < C
+    slot = jnp.where(keep, exp_sorted * C + pos_in_e, E * C)  # E*C = dropped
+
+    # --- dispatch via slot-id indirection (no (T*K, d) intermediate) -------
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)
+    tok_in_slot = (
+        jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(tok_sorted)[:-1]
+    )
+    buf = xt_pad[tok_in_slot].reshape(E, C, d)
+    buf = shard(buf, mesh, "experts", None, None)
+
+    # --- expert compute -----------------------------------------------------
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, params["wg"].astype(dt))
+    ) * jnp.einsum("ecd,edf->ecf", buf, params["wu"].astype(dt))
+    h = shard(h, mesh, "experts", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["wd"].astype(dt))
+    out_buf = shard(out_buf, mesh, "experts", None, None)
+
+    # --- combine: scatter-add from slot-major -------------------------------
+    gate_in_slot = (
+        jnp.zeros((E * C + 1,), jnp.float32)
+        .at[slot]
+        .set(jnp.where(keep, gate_sorted, 0.0))[:-1]
+    )
+    flat = out_buf.reshape(E * C, d).astype(jnp.float32)
+    y = (
+        jnp.zeros((T + 1, d), jnp.float32)
+        .at[tok_in_slot]
+        .add(flat * gate_in_slot[:, None])[:-1]
+    )
+    wsum = (
+        jnp.zeros((T + 1,), jnp.float32)
+        .at[tok_in_slot]
+        .add(gate_in_slot)[:-1]
+    )
+    y = y / jnp.maximum(wsum, 1e-9)[:, None]
+    y = y.astype(dt).reshape(B, S, d)
+    return shard(y, mesh, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# EP shard_map path (production)
+# ---------------------------------------------------------------------------
+
+
+def _ep_body(x_loc, router, wg, wu, wd, *, cfg: ModelConfig, e_loc: int,
+             mp: str):
+    Bl, Sl, d = x_loc.shape
+    dt = x_loc.dtype
+    T = Bl * Sl
+    xt = x_loc.reshape(T, d)
+    C = capacity(T, cfg)
+
+    exp_sorted, tok_sorted, gate_sorted, pos_in_e = _route(
+        xt, router.astype(dt), cfg
+    )
+    e0 = jax.lax.axis_index(mp).astype(jnp.int32) * e_loc
+    local = (
+        (exp_sorted >= e0) & (exp_sorted < e0 + e_loc) & (pos_in_e < C)
+    )
+    slot = jnp.where(local, (exp_sorted - e0) * C + pos_in_e, e_loc * C)
+
+    # dispatch: slot-id indirection, only this shard's experts materialize
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)
+    tok_in_slot = (
+        jnp.full((e_loc * C + 1,), T, jnp.int32).at[slot].set(tok_sorted)[:-1]
+    )
+    buf = xt_pad[tok_in_slot].reshape(e_loc, C, d)
+
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt))
+    ) * jnp.einsum("ecd,edf->ecf", buf, wu.astype(dt))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+
+    gate_in_slot = (
+        jnp.zeros((e_loc * C + 1,), jnp.float32)
+        .at[slot]
+        .set(jnp.where(local, gate_sorted, 0.0))[:-1]
+    )
+    flat = out_buf.reshape(e_loc * C, d).astype(jnp.float32)
+    y = (
+        jnp.zeros((T + 1, d), jnp.float32)
+        .at[tok_in_slot]
+        .add(flat * gate_in_slot[:, None])[:-1]
+    )
+    wsum = (
+        jnp.zeros((T + 1,), jnp.float32)
+        .at[tok_in_slot]
+        .add(gate_in_slot)[:-1]
+    )
+    # one collective per layer: combine expert slices over the model axis
+    y = jax.lax.psum(y, mp)
+    wsum = jax.lax.psum(wsum, mp)
+    y = y / jnp.maximum(wsum, 1e-9)[:, None]
+    return y.astype(dt).reshape(Bl, Sl, d)
+
+
+def _moe_block_ep(params, x, cfg: ModelConfig, mesh):
+    B, S, d = x.shape
+    E = cfg.n_experts
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    mp = "model"
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+    mp_size = mesh.shape[mp]
+    if E % mp_size != 0:
+        return _moe_block_global(params, x, cfg, mesh)
+    e_loc = E // mp_size
+    # tokens shard over the data axes when divisible; tiny decode batches
+    # fall back to replicated routing (the expert compute stays sliced)
+    tok_spec = P(dp, None, None) if B % dp_size == 0 else P(None, None, None)
+
+    body = functools.partial(_ep_body, cfg=cfg, e_loc=e_loc, mp=mp)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            tok_spec,
+            P(None, None),  # router replicated inside the block
+            P(mp, None, None),  # wg: experts sliced over "model"
+            P(mp, None, None),  # wu
+            P(mp, None, None),  # wd
+        ),
+        out_specs=tok_spec,
+        check_vma=False,
+    )
+    y = fn(x, params["router"], params["wg"], params["wu"], params["wd"])
+    return shard(y, mesh, "batch", "seq", None)
+
+
+def moe_block(params, x, cfg: ModelConfig, mesh):
+    """x: (B, S, d) -> (B, S, d); EP shard_map on a mesh, reference off."""
+    if mesh is None:
+        y = _moe_block_global(params, x, cfg, mesh)
+    else:
+        y = _moe_block_ep(params, x, cfg, mesh)
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], x, mesh)
+    return y

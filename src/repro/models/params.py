@@ -1,0 +1,109 @@
+"""Declarative parameter definitions.
+
+A module describes its parameters once as ``ParamDef``s (shape + logical
+dim names + init); from that single source we derive:
+
+  * init_params(defs, key)      — materialized params (smoke tests/examples)
+  * abstract_params(defs)       — ShapeDtypeStructs (dry-run, no allocation)
+  * param_specs(defs, mesh)     — PartitionSpecs via the logical-axis rules
+
+Stacked (scanned) layers prepend a ("layers", L) dim with ``stack_defs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
+
+from ..distributed.sharding import spec as logical_spec
+
+__all__ = [
+    "ParamDef",
+    "pdef",
+    "stack_defs",
+    "init_params",
+    "abstract_params",
+    "param_specs",
+    "tree_bytes",
+    "count_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    names: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in)
+    scale: float = 0.02
+    dtype: str = "float32"
+
+
+def pdef(shape, names, init="normal", scale=0.02, dtype="float32") -> ParamDef:
+    assert len(shape) == len(names), (shape, names)
+    return ParamDef(tuple(shape), tuple(names), init, scale, dtype)
+
+
+def stack_defs(defs, n_layers: int):
+    return jax.tree.map(
+        lambda d: ParamDef((n_layers, *d.shape), ("layers", *d.names),
+                           d.init, d.scale, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _init_one(d: ParamDef, key) -> jax.Array:
+    dt = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "scaled":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        return (jax.random.normal(key, d.shape) / math.sqrt(fan_in)).astype(dt)
+    return (jax.random.normal(key, d.shape) * d.scale).astype(dt)
+
+
+def init_params(defs, key):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def param_specs(defs, mesh: Mesh):
+    return jax.tree.map(
+        lambda d: logical_spec(mesh, d.names, d.shape),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def count_params(defs) -> int:
+    return sum(
+        math.prod(d.shape)
+        for d in jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    )
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize if hasattr(x, "size") else 0
+        for x in jax.tree.leaves(tree)
+    )

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked train/prefill scan +
+single-step recurrence for decode.
+
+Per head h with state size N, head dim P, the SSM is
+
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * B_t x_t^T        s in R^{N x P}
+    y_t = C_t . s_t + D_h * x_t
+
+The chunked algorithm (Dao & Gu '24) splits the sequence into chunks of Q:
+an intra-chunk quadratic term (C B^T masked by the decay kernel L) plus an
+inter-chunk recurrence on per-chunk states — both MXU-friendly einsums; the
+inter-chunk scan carries only (H, N, P) states.  A causal depthwise conv
+(kernel 4) precedes the SSM on the x/B/C paths, and a gated (silu z-branch)
+RMSNorm follows it, as in the reference Mamba2 block.
+
+``tests/test_ssm.py`` checks chunked == step-by-step recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .params import pdef
+
+__all__ = ["ssm_defs", "mamba2_block", "mamba2_decode_step", "ssm_state_shape"]
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = 1  # single B/C group
+    return di, H, P, N, G
+
+
+def ssm_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    di, H, P, N, G = _dims(cfg)
+    conv_dim = di + 2 * G * N
+    return {
+        # in_proj packs [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        "in_proj": pdef((d, 2 * di + 2 * G * N + H), ("fsdp", "model"),
+                        init="scaled"),
+        "conv_w": pdef((cfg.conv_kernel, conv_dim), (None, "model")),
+        "conv_b": pdef((conv_dim,), ("model",), init="zeros"),
+        "A_log": pdef((H,), ("model",), init="ones"),
+        "D": pdef((H,), ("model",), init="ones"),
+        "dt_bias": pdef((H,), ("model",), init="zeros"),
+        "norm_scale": pdef((di,), ("model",), init="ones"),
+        "out_proj": pdef((di, d), ("model", "fsdp"), init="scaled"),
+    }
+
+
+def ssm_state_shape(cfg: ModelConfig, batch: int):
+    di, H, P, N, G = _dims(cfg)
+    return {
+        "ssm": (batch, H, N, P),
+        "conv": (batch, cfg.conv_kernel - 1, di + 2 * G * N),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, H, P, N, G = _dims(cfg)
+    z = proj[..., :di]
+    xBC = proj[..., di : 2 * di + 2 * G * N]
+    dt = proj[..., 2 * di + 2 * G * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, carry=None):
+    """Depthwise causal conv along seq.  xBC (B,S,Cd), w (K,Cd)."""
+    K = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = carry.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(
+        xp[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    new_carry = xp[:, -(K - 1) :, :] if K > 1 else None
+    return jax.nn.silu(out + b[None, None, :]), new_carry
+
+
+def _gated_norm(y, z, scale, eps: float = 1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(ms + eps) * scale
+
+
+def mamba2_block(params, x, cfg: ModelConfig, mesh, initial_state=None):
+    """x: (B, S, d) -> (B, S, d); S must be a multiple of ssm_chunk."""
+    B, S, d = x.shape
+    di, H, P, N, G = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    nc = S // Q
+    dt_ = x.dtype
+
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xBC, dtt = _split_proj(cfg, proj)
+    xBC, _ = _causal_conv(xBC, params["conv_w"].astype(dt_),
+                          params["conv_b"].astype(dt_))
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di : di + G * N].reshape(B, S, N).astype(jnp.float32)
+    Cm = xBC[..., di + G * N :].reshape(B, S, N).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dtt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,) negative
+    xs = shard(xs, mesh, "batch", "seq", "heads", None)
+
+    # chunked SSD ------------------------------------------------------------
+    xs_c = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    B_c = Bm.reshape(B, nc, Q, N)
+    C_c = Cm.reshape(B, nc, Q, N)
+    dt_c = dt.reshape(B, nc, Q, H)
+    dA = dt_c * A[None, None, None, :]  # (B,nc,Q,H)
+    cum = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+    # Stability clamp: decays below e^-20 are numerically zero, and the
+    # clamp bounds exp(-cum) <= e^20 in the factorized intra-chunk term.
+    cum = jnp.maximum(cum, -20.0)
+    total = cum[:, :, -1:, :]  # (B,nc,1,H)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j.  Factorized as
+    # exp(cum_i) * exp(-cum_j) so the (Q, Q) term never carries the head
+    # dim: y_intra[i] = exp(cum_i) * sum_j M[i,j] u[j] with
+    # M = (C B^T) o causal, u[j] = exp(-cum_j) dt_j x_j.
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :]
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)  # (B,nc,Q,Q)
+    M = jnp.where(causal, cb, 0.0)
+    u = jnp.exp(-cum)[..., None] * dt_c[..., None] * xs_c  # (B,nc,Q,H,P)
+    y_intra = jnp.exp(cum)[..., None] * jnp.einsum(
+        "bcij,bcjhp->bcihp", M, u
+    )
+
+    # per-chunk state contribution: sum_j exp(total - cum_j) dt_j B_j x_j^T
+    decay_out = jnp.exp(total - cum)  # (B,nc,Q,H)
+    s_local = jnp.einsum(
+        "bcjh,bcjh,bcjn,bcjhp->bchnp", decay_out, dt_c, B_c, xs_c
+    )  # (B,nc,H,N,P)
+
+    # inter-chunk recurrence: s_c = exp(total_c) s_{c-1} + s_local_c
+    g = jnp.exp(total[:, :, 0, :])  # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        g_c, sl = inp  # (B,H), (B,H,N,P)
+        s = g_c[:, :, None, None] * s_prev + sl
+        return s, s_prev  # emit the state *entering* the chunk
+
+    s0 = (
+        jnp.zeros((B, H, N, P), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    s_last, s_in = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(g, 1, 0), jnp.moveaxis(s_local, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # inter-chunk output: y_j += exp(cum_j) C_j . s_in
+    y_inter = jnp.einsum(
+        "bcjh,bcjn,bchnp->bcjhp", jnp.exp(cum), C_c, s_in
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = _gated_norm(
+        y.reshape(B, S, di), z, params["norm_scale"].astype(jnp.float32)
+    )
+    out = y.astype(dt_) @ params["out_proj"].astype(dt_)
+    return shard(out, mesh, "batch", "seq", None), s_last
+
+
+def mamba2_decode_step(params, x, cfg: ModelConfig, mesh, state):
+    """x: (B, d) single token; state dict {ssm (B,H,N,P), conv (B,K-1,Cd)}."""
+    B, d = x.shape
+    di, H, P, N, G = _dims(cfg)
+    dt_ = x.dtype
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xBC, dtt = _split_proj(cfg, proj)
+    xBC, new_conv = _causal_conv(
+        xBC[:, None, :], params["conv_w"].astype(dt_),
+        params["conv_b"].astype(dt_), carry=state["conv"],
+    )
+    xBC = xBC[:, 0]
+    xs = xBC[..., :di].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC[..., di : di + G * N].astype(jnp.float32)  # (B,N)
+    Cm = xBC[..., di + G * N :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dtt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    g = jnp.exp(dt * A[None, :])  # (B,H)
+    s = state["ssm"].astype(jnp.float32)
+    s_new = g[:, :, None, None] * s + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bm, xs
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm, s_new)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs
+    y = _gated_norm(
+        y.reshape(B, di), z, params["norm_scale"].astype(jnp.float32)
+    )
+    out = y.astype(dt_) @ params["out_proj"].astype(dt_)
+    return (
+        shard(out, mesh, "batch", None),
+        {"ssm": s_new.astype(state["ssm"].dtype), "conv": new_conv},
+    )

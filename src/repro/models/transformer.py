@@ -1,0 +1,516 @@
+"""Decoder stacks for all assigned families, built for pod-scale lowering:
+
+  * scan-over-layers (compile time O(1) in depth) with nested remat groups
+    (outer scan over L/G groups, inner scan over G layers, both
+    checkpointed -> boundary memory L/G instead of L);
+  * Megatron-style sequence-parallel residual stream: layer-boundary
+    activations are sharded over the "model" axis ("act_seq" rule) and
+    gathered inside the layer where heads/ff take over;
+  * per-family blocks: dense (GQA/SWA + SwiGLU), MoE, Mamba2 (SSD),
+    Zamba2-style hybrid (Mamba2 backbone + one *shared* attention+MLP block
+    applied every k layers through a concat-projection, weights reused);
+  * decode steps with functional KV/SSM caches (ring buffer for SWA).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from . import layers as L
+from .moe import moe_block, moe_defs
+from .params import pdef, stack_defs
+from .ssm import mamba2_block, mamba2_decode_step, ssm_defs, ssm_state_shape
+
+__all__ = ["Model", "RunFlags"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    remat: str = "full"  # none | full | dots
+    layer_groups: int = 1  # nested-remat group count (1 = flat scan)
+    causal_block_skip: bool = False  # perf iteration (EXPERIMENTS Sec Perf)
+    seq_shard_boundary: bool = True  # Megatron-SP residual stream
+    analysis_unroll: bool = False  # unroll every scan (layers, kv blocks,
+    # CE chunks) so cost_analysis counts true work — XLA counts while-loop
+    # bodies ONCE regardless of trip count.  Analysis lowering only
+    # (launch/dryrun.py lowers shallow unrolled variants + extrapolates);
+    # never used for execution.
+
+
+def _policy(name: str):
+    return {
+        "none": None,
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[name]
+
+
+def _block_defs(cfg: ModelConfig):
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm"):
+        return {
+            "ln1": L.norm_defs(cfg),
+            "attn": L.attn_defs(cfg),
+            "ln2": L.norm_defs(cfg),
+            "mlp": L.mlp_defs(cfg),
+        }
+    if fam == "moe":
+        return {
+            "ln1": L.norm_defs(cfg),
+            "attn": L.attn_defs(cfg),
+            "ln2": L.norm_defs(cfg),
+            "moe": moe_defs(cfg),
+        }
+    if fam in ("ssm", "hybrid"):
+        return {"ln1": L.norm_defs(cfg), "ssm": ssm_defs(cfg)}
+    raise ValueError(fam)
+
+
+def _kv_repeat(cfg: ModelConfig, mesh) -> int:
+    """KV-cache head replication factor for decode TP.
+
+    When n_kv_heads doesn't divide the "model" axis, the logical-axis rules
+    fall back to replicating the cache over it — 16x the footprint at
+    mesh (16,16).  Storing each kv head ``rep`` times (smallest rep with
+    kvh*rep divisible by the axis, rep dividing the GQA group) costs rep x
+    memory but shards the head dim, a net (axis/rep)x win.  MHA configs
+    (G == 1, e.g. musicgen/minicpm) can't replicate — they fall back to
+    sequence-sharded caches (launch/dryrun.py decode rules).
+    """
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return 1
+    kvh = cfg.n_kv_heads
+    if not kvh or cfg.family == "ssm":
+        return 1
+    mp = mesh.shape["model"]
+    if kvh % mp == 0:
+        return 1
+    G = cfg.n_heads // kvh
+    for rep in range(2, G + 1):
+        if G % rep == 0 and (kvh * rep) % mp == 0:
+            return rep
+    return 1
+
+
+def _shared_block_defs(cfg: ModelConfig):
+    return {
+        "proj": pdef((2 * cfg.d_model, cfg.d_model), ("fsdp", None),
+                     init="scaled"),
+        "ln1": L.norm_defs(cfg),
+        "attn": L.attn_defs(cfg),
+        "ln2": L.norm_defs(cfg),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+class Model:
+    """build once per (config, mesh, flags); exposes defs + step functions."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None, flags: RunFlags = RunFlags()):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.flags = flags
+        self.n_scan = cfg.n_layers - cfg.first_dense_layers
+        g = flags.layer_groups
+        if g > 1 and self.n_scan % g != 0:
+            g = 1
+        self.groups = g
+        self.kv_rep = _kv_repeat(cfg, mesh)
+
+    # ------------------------------------------------------------------ defs
+
+    def defs(self):
+        cfg = self.cfg
+        out: dict[str, Any] = {"embed": L.embed_defs(cfg)}
+        # blocks are always stacked (L, ...); nested-remat grouping reshapes
+        # at trace time so the checkpoint layout is remat-independent.
+        out["blocks"] = stack_defs(_block_defs(cfg), self.n_scan)
+        if cfg.first_dense_layers:
+            dense_cfg = dataclasses.replace(cfg, d_ff=cfg.dense_ff)
+            out["first"] = stack_defs(
+                {
+                    "ln1": L.norm_defs(cfg),
+                    "attn": L.attn_defs(cfg),
+                    "ln2": L.norm_defs(cfg),
+                    "mlp": L.mlp_defs(dense_cfg),
+                },
+                cfg.first_dense_layers,
+            )
+        if cfg.family == "hybrid":
+            out["shared"] = _shared_block_defs(cfg)
+        out["final_norm"] = L.norm_defs(cfg)
+        return out
+
+    # ------------------------------------------------------------ fwd blocks
+
+    def _boundary(self, x):
+        names = ("batch", "act_seq" if self.flags.seq_shard_boundary else "seq",
+                 None)
+        return shard(x, self.mesh, *names)
+
+    def _dense_block(self, p, x, positions, ff_cfg=None):
+        cfg = ff_cfg or self.cfg
+        h = L.attention(
+            p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg, self.mesh,
+            positions, causal_block_skip=self.flags.causal_block_skip,
+            unroll=self.flags.analysis_unroll,
+        )
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg), self.mesh)
+        return self._boundary(x)
+
+    def _moe_layer(self, p, x, positions):
+        cfg = self.cfg
+        h = L.attention(
+            p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg, self.mesh,
+            positions, causal_block_skip=self.flags.causal_block_skip,
+            unroll=self.flags.analysis_unroll,
+        )
+        x = x + h
+        x = x + moe_block(p["moe"], L.apply_norm(p["ln2"], x, cfg), cfg,
+                          self.mesh)
+        return self._boundary(x)
+
+    def _ssm_layer(self, p, x):
+        cfg = self.cfg
+        h, _ = mamba2_block(p["ssm"], L.apply_norm(p["ln1"], x, cfg), cfg,
+                            self.mesh)
+        return self._boundary(x + h)
+
+    def _shared_block(self, p, x, x0, positions):
+        cfg = self.cfg
+        cat = jnp.concatenate([x, x0], axis=-1)
+        h = (cat @ p["proj"].astype(x.dtype))
+        h = self._dense_block(
+            {"ln1": p["ln1"], "attn": p["attn"], "ln2": p["ln2"],
+             "mlp": p["mlp"]},
+            h, positions,
+        )
+        return self._boundary(x + h)
+
+    # ------------------------------------------------------------- forward
+
+    def hidden_states(self, params, batch):
+        """Full-sequence forward -> final hidden states (B, S, d)."""
+        cfg = self.cfg
+        if cfg.input_mode == "embeddings":
+            x = batch["embeddings"].astype(jnp.dtype(cfg.dtype))
+            x = shard(x, self.mesh, "batch", "seq", None)
+        else:
+            x = L.embed(params["embed"], batch["tokens"], cfg, self.mesh)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = self._boundary(x)
+        x0 = x
+
+        if cfg.first_dense_layers:
+            dense_cfg = dataclasses.replace(cfg, d_ff=cfg.dense_ff)
+            for i in range(cfg.first_dense_layers):
+                p_i = jax.tree.map(lambda a: a[i], params["first"])
+                x = self._dense_block(p_i, x, positions, ff_cfg=dense_cfg)
+
+        fam = cfg.family
+        every = cfg.shared_block_every
+
+        def layer_fn(carry, p_layer):
+            x, idx = carry
+            if fam in ("dense", "audio", "vlm"):
+                x = self._dense_block(p_layer, x, positions)
+            elif fam == "moe":
+                x = self._moe_layer(p_layer, x, positions)
+            elif fam == "ssm":
+                x = self._ssm_layer(p_layer, x)
+            else:  # hybrid
+                x = self._ssm_layer(p_layer, x)
+                x = jax.lax.cond(
+                    (idx + 1) % every == 0,
+                    lambda x: self._shared_block(params["shared"], x, x0,
+                                                 positions),
+                    lambda x: x,
+                    x,
+                )
+            return (x, idx + 1), None
+
+        policy = _policy(self.flags.remat)
+        if self.flags.remat != "none":
+            layer_fn = jax.checkpoint(layer_fn, policy=policy,
+                                      prevent_cse=False)
+
+        if self.flags.analysis_unroll:
+            # python loop (static): every layer's work appears in the HLO,
+            # so cost_analysis counts it; shared blocks use static python
+            # branching (exact 1-in-every counting, no lax.cond)
+            def hybrid_shared(p_i, x):
+                x = self._ssm_layer(p_i, x)
+                return self._shared_block(params["shared"], x, x0, positions)
+
+            def hybrid_plain(p_i, x):
+                return self._ssm_layer(p_i, x)
+
+            if self.flags.remat != "none":
+                hybrid_shared = jax.checkpoint(hybrid_shared, policy=policy,
+                                               prevent_cse=False)
+                hybrid_plain = jax.checkpoint(hybrid_plain, policy=policy,
+                                              prevent_cse=False)
+            carry = (x, jnp.int32(0))
+            for i in range(self.n_scan):
+                p_i = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+                if fam == "hybrid":
+                    # static branching: no lax.cond (whose untaken branch
+                    # cost_analysis would also count)
+                    x, idx = carry
+                    fn = hybrid_shared if (i + 1) % every == 0 else (
+                        hybrid_plain)
+                    carry = (fn(p_i, x), idx + 1)
+                else:
+                    carry, _ = layer_fn(carry, p_i)
+            x = carry[0]
+            return L.apply_norm(params["final_norm"], x, cfg)
+
+        if self.groups > 1:
+            g = self.groups
+            grouped = jax.tree.map(
+                lambda a: a.reshape(g, a.shape[0] // g, *a.shape[1:]),
+                params["blocks"],
+            )
+
+            def group_fn(carry, p_group):
+                carry, _ = jax.lax.scan(layer_fn, carry, p_group)
+                return carry, None
+
+            if self.flags.remat != "none":
+                group_fn = jax.checkpoint(group_fn, policy=policy,
+                                          prevent_cse=False)
+            (x, _), _ = jax.lax.scan(group_fn, (x, jnp.int32(0)), grouped)
+        else:
+            (x, _), _ = jax.lax.scan(layer_fn, (x, jnp.int32(0)),
+                                     params["blocks"])
+        return L.apply_norm(params["final_norm"], x, cfg)
+
+    def loss(self, params, batch):
+        x = self.hidden_states(params, batch)
+        return L.chunked_ce_loss(params["embed"], x, batch["labels"], self.cfg,
+                                 self.mesh,
+                                 unroll=self.flags.analysis_unroll)
+
+    def prefill(self, params, batch):
+        """Forward + final-position logits (the prefill_32k lowering)."""
+        x = self.hidden_states(params, batch)
+        W = L.unembed_matrix(params["embed"], self.cfg).astype(x.dtype)
+        logits = x[:, -1, :] @ W
+        return shard(logits, self.mesh, "batch", "vocab")
+
+    # ------------------------------------------------------------- decode
+
+    def cache_shapes(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        fam = cfg.family
+        dt = jnp.dtype(cfg.dtype)
+        kdt = jnp.dtype(cfg.kv_dtype_)
+        out = {}
+        kvh, dh = cfg.n_kv_heads * self.kv_rep, cfg.head_dim_
+        eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else (
+            cache_len
+        )
+        if fam in ("dense", "audio", "vlm", "moe"):
+            n_attn = cfg.n_layers
+            out["k"] = jax.ShapeDtypeStruct((n_attn, batch, eff, kvh, dh), kdt)
+            out["v"] = jax.ShapeDtypeStruct((n_attn, batch, eff, kvh, dh), kdt)
+        if fam in ("ssm", "hybrid"):
+            st = ssm_state_shape(cfg, batch)
+            nl = self.n_scan
+            out["ssm"] = jax.ShapeDtypeStruct((nl, *st["ssm"]), jnp.float32)
+            out["conv"] = jax.ShapeDtypeStruct((nl, *st["conv"]), dt)
+        if fam == "hybrid":
+            n_inv = cfg.n_layers // cfg.shared_block_every
+            out["k"] = jax.ShapeDtypeStruct((n_inv, batch, cache_len, kvh, dh),
+                                            kdt)
+            out["v"] = jax.ShapeDtypeStruct((n_inv, batch, cache_len, kvh, dh),
+                                            kdt)
+        return out
+
+    def init_cache(self, batch: int, cache_len: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_shapes(batch, cache_len),
+        )
+
+    def _cache_slot(self, position):
+        cfg = self.cfg
+        if cfg.sliding_window:
+            return position % cfg.sliding_window
+        return position
+
+    def decode_step(self, params, cache, tokens, position):
+        """One-token decode: tokens (B,), position scalar -> (logits, cache).
+
+        Attention families run a scan over stacked layers with the cache as
+        carry (dynamic_update_slice per layer); hybrid unrolls (38 layers,
+        7 shared-attn invocations with their own caches).
+        """
+        cfg = self.cfg
+        fam = cfg.family
+        dt = jnp.dtype(cfg.dtype)
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(dt)
+        x = shard(x, self.mesh, "batch", None)
+        x0 = x
+        slot = self._cache_slot(position)
+
+        if fam in ("dense", "audio", "vlm", "moe"):
+            n_first = cfg.first_dense_layers
+            if n_first:
+                for i in range(n_first):
+                    p_i = jax.tree.map(lambda a: a[i], params["first"])
+                    x, cache = self._decode_attn_layer(
+                        p_i, x, cache, i, position, slot,
+                        mlp_fn="mlp",
+                        ff_cfg=dataclasses.replace(cfg, d_ff=cfg.dense_ff),
+                    )
+
+            # The per-layer cache rides the scan as xs/ys, NOT as carry: a
+            # stacked-cache carry is double-buffered by XLA (2x the cache in
+            # temp — 16.8 GB/chip on llama3-405b decode_32k, measured),
+            # while xs slices are read-once and ys can alias the donated
+            # input buffer.  See EXPERIMENTS.md Sec Perf.
+            def step(x, inp):
+                p_layer, ck, cv = inp
+                xn = L.apply_norm(p_layer["ln1"], x[:, None, :], cfg)[:, 0]
+                y, k_new, v_new = L.decode_attention(
+                    p_layer["attn"], xn, cfg, self.mesh, ck, cv, position
+                )
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    ck, k_new[:, None].astype(ck.dtype), slot, axis=1
+                )
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cv, v_new[:, None].astype(cv.dtype), slot, axis=1
+                )
+                x = x + y
+                xn = L.apply_norm(p_layer["ln2"], x[:, None, :], cfg)[:, 0]
+                if fam == "moe":
+                    m = moe_block(
+                        p_layer["moe"], xn[:, None, :], cfg, self.mesh
+                    )[:, 0]
+                else:
+                    m = L.mlp(p_layer["mlp"], xn[:, None, :], self.mesh)[:, 0]
+                return x + m, (ck, cv)
+
+            nf = n_first
+            if self.flags.analysis_unroll:
+                ks, vs = [], []
+                for i in range(self.n_scan):
+                    p_i = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+                    x, (ck, cv) = step(
+                        x, (p_i, cache["k"][nf + i], cache["v"][nf + i])
+                    )
+                    ks.append(ck)
+                    vs.append(cv)
+                k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+            else:
+                x, (k_new, v_new) = jax.lax.scan(
+                    step, x,
+                    (params["blocks"], cache["k"][nf:], cache["v"][nf:]),
+                )
+            if nf:
+                k_new = jnp.concatenate([cache["k"][:nf], k_new])
+                v_new = jnp.concatenate([cache["v"][:nf], v_new])
+            cache = dict(cache, k=k_new, v=v_new)
+
+        elif fam == "ssm":
+            def step(carry, inp):
+                x, li = carry
+                p_layer, s_l, c_l = inp
+                xn = L.apply_norm(p_layer["ln1"], x[:, None, :], cfg)[:, 0]
+                y, new_state = mamba2_decode_step(
+                    p_layer["ssm"], xn, cfg, self.mesh,
+                    {"ssm": s_l, "conv": c_l},
+                )
+                return (x + y, li + 1), (new_state["ssm"], new_state["conv"])
+
+            if self.flags.analysis_unroll:
+                carry, ss, cc = (x, jnp.int32(0)), [], []
+                for i in range(self.n_scan):
+                    p_i = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+                    carry, (s_n, c_n) = step(
+                        carry, (p_i, cache["ssm"][i], cache["conv"][i])
+                    )
+                    ss.append(s_n)
+                    cc.append(c_n)
+                x = carry[0]
+                new_ssm, new_conv = jnp.stack(ss), jnp.stack(cc)
+            else:
+                (x, _), (new_ssm, new_conv) = jax.lax.scan(
+                    step, (x, jnp.int32(0)),
+                    (params["blocks"], cache["ssm"], cache["conv"]),
+                )
+            cache = dict(cache, ssm=new_ssm, conv=new_conv)
+
+        else:  # hybrid: unrolled
+            every = cfg.shared_block_every
+            new_ssm, new_conv = [], []
+            k_all, v_all = cache["k"], cache["v"]
+            inv = 0
+            for i in range(self.n_scan):
+                p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+                xn = L.apply_norm(p_i["ln1"], x[:, None, :], cfg)[:, 0]
+                y, st = mamba2_decode_step(
+                    p_i["ssm"], xn, cfg, self.mesh,
+                    {"ssm": cache["ssm"][i], "conv": cache["conv"][i]},
+                )
+                x = x + y
+                new_ssm.append(st["ssm"])
+                new_conv.append(st["conv"])
+                if (i + 1) % every == 0:
+                    p_s = params["shared"]
+                    cat = jnp.concatenate([x, x0], axis=-1)
+                    h = cat @ p_s["proj"].astype(dt)
+                    hn = L.apply_norm(p_s["ln1"], h[:, None, :], cfg)[:, 0]
+                    y2, k_new, v_new = L.decode_attention(
+                        p_s["attn"], hn, cfg, self.mesh,
+                        k_all[inv], v_all[inv], position,
+                    )
+                    h = h + y2
+                    hn = L.apply_norm(p_s["ln2"], h[:, None, :], cfg)[:, 0]
+                    h = h + L.mlp(p_s["mlp"], hn[:, None, :], self.mesh)[:, 0]
+                    k_all = k_all.at[inv, :, slot].set(
+                        k_new.astype(k_all.dtype))
+                    v_all = v_all.at[inv, :, slot].set(
+                        v_new.astype(v_all.dtype))
+                    x = x + h
+                    inv += 1
+            cache = dict(
+                cache,
+                ssm=jnp.stack(new_ssm),
+                conv=jnp.stack(new_conv),
+                k=k_all,
+                v=v_all,
+            )
+
+        x = L.apply_norm(params["final_norm"], x[:, None, :], cfg)[:, 0]
+        W = L.unembed_matrix(params["embed"], cfg).astype(dt)
+        logits = x @ W
+        return shard(logits, self.mesh, "batch", "vocab"), cache
+
+    def _decode_attn_layer(self, p, x, cache, li, position, slot,
+                           mlp_fn="mlp", ff_cfg=None):
+        cfg = ff_cfg or self.cfg
+        ck, cv = cache["k"][li], cache["v"][li]
+        xn = L.apply_norm(p["ln1"], x[:, None, :], self.cfg)[:, 0]
+        y, k_new, v_new = L.decode_attention(
+            p["attn"], xn, self.cfg, self.mesh, ck, cv, position
+        )
+        x = x + y
+        xn = L.apply_norm(p["ln2"], x[:, None, :], self.cfg)[:, 0]
+        x = x + L.mlp(p[mlp_fn], xn[:, None, :], self.mesh)[:, 0]
+        cache = dict(
+            cache,
+            k=cache["k"].at[li, :, slot].set(k_new.astype(cache["k"].dtype)),
+            v=cache["v"].at[li, :, slot].set(v_new.astype(cache["v"].dtype)),
+        )
+        return x, cache

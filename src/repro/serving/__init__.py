@@ -1,0 +1,5 @@
+"""Serving substrate: decode loop + samplers (KV caches live in models/)."""
+
+from .decode import SamplerConfig, generate, make_serve_step
+
+__all__ = ["SamplerConfig", "generate", "make_serve_step"]

@@ -1,0 +1,77 @@
+"""Serving loop: batched autoregressive generation over the decode step.
+
+The lowered artifact for the decode_* dry-run shapes is ``make_serve_step``
+(one token against a full cache); generation here drives it host-side with
+temperature / top-k sampling.  Prompt ingestion reuses the decode step
+token-by-token (exact, cache-filling); production prefill lowers the
+full-sequence forward (``Model.prefill``) instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SamplerConfig", "make_serve_step", "generate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0
+    top_k: int = 0  # 0 = full softmax
+    seed: int = 0
+
+
+def make_serve_step(model):
+    """jit'd (params, cache, tokens (B,), position) -> (logits, cache)."""
+
+    def step(params, cache, tokens, position):
+        return model.decode_step(params, cache, tokens, position)
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def _sample(logits, key, cfg: SamplerConfig):
+    logits = logits.astype(jnp.float32)
+    if cfg.temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k:
+        vals, idx = jax.lax.top_k(logits, cfg.top_k)
+        draw = jax.random.categorical(key, vals, axis=-1)
+        return jnp.take_along_axis(idx, draw[:, None], axis=1)[:, 0].astype(
+            jnp.int32
+        )
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(
+    model,
+    params,
+    prompts: np.ndarray,  # (B, P) int32 prompt tokens
+    max_new_tokens: int,
+    cache_len: int,
+    sampler: SamplerConfig = SamplerConfig(),
+):
+    """Returns (B, max_new_tokens) sampled tokens.  CPU-friendly driver."""
+    B, P = prompts.shape
+    serve_step = make_serve_step(model)
+    cache = model.init_cache(B, cache_len)
+    key = jax.random.PRNGKey(sampler.seed)
+
+    logits = None
+    for pos in range(P):
+        logits, cache = serve_step(
+            params, cache, jnp.asarray(prompts[:, pos]), jnp.int32(pos)
+        )
+    out = np.empty((B, max_new_tokens), np.int32)
+    tok = _sample(logits, key, sampler)
+    for i in range(max_new_tokens):
+        out[:, i] = np.asarray(tok)
+        key, sub = jax.random.split(key)
+        logits, cache = serve_step(params, cache, tok, jnp.int32(P + i))
+        tok = _sample(logits, sub, sampler)
+    return out

@@ -1,0 +1,148 @@
+"""Train step assembly: mixed precision, microbatch accumulation, sharded
+state, metrics.
+
+Flow per step (bf16-compute / f32-or-bf16SR-master):
+  compute = cast(master, bf16)            # FSDP all-gathers happen in bf16
+  grads   = grad(loss)(compute, batch)    # reduce-scatter in bf16 (wire
+                                          # compression)
+  opt     = adamw_update(grads, opt)      # f32 math, quantized storage
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.params import ParamDef, param_specs, pdef
+from .optimizer import AdamWConfig, adamw_init, adamw_update, moment_defs
+
+__all__ = [
+    "make_train_step",
+    "train_state_defs",
+    "init_train_state",
+    "train_state_shardings",
+    "batch_shardings",
+]
+
+
+def _cast_compute(master):
+    return jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if jnp.issubdtype(p.dtype, jnp.floating)
+        else p,
+        master,
+    )
+
+
+def make_train_step(model, ocfg: AdamWConfig, microbatches: int = 1,
+                    unroll: bool = False):
+    """(state, batch) -> (state, metrics).  state = adamw opt_state + rng.
+
+    ``unroll`` unrolls the microbatch-accumulation scan (analysis lowerings
+    only — cost_analysis counts loop bodies once)."""
+
+    def loss_fn(compute, mb):
+        return model.loss(compute, mb)
+
+    def step_fn(state, batch):
+        compute = _cast_compute(state["opt"]["master"])
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(compute, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(
+                    microbatches, x.shape[0] // microbatches, *x.shape[1:]
+                )
+                if x.ndim >= 1
+                else x,
+                batch,
+            )
+
+            acc_dt = jnp.dtype(ocfg.acc_dtype)
+
+            def acc(carry, mb_i):
+                loss_a, g_a = carry
+                loss_i, g_i = jax.value_and_grad(loss_fn)(compute, mb_i)
+                g_a = jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), g_a, g_i
+                )
+                return (loss_a + loss_i, g_a), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), compute
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.float32(0.0), g0), mb,
+                unroll=microbatches if unroll else 1,
+            )
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        opt, _, metrics = adamw_update(grads, state["opt"], ocfg,
+                                       rng=state["rng"])
+        new_state = {"opt": opt, "rng": state["rng"]}
+        metrics = dict(metrics, loss=loss, step=opt["step"])
+        return new_state, metrics
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# state defs / init / shardings
+# ---------------------------------------------------------------------------
+
+
+def train_state_defs(model_defs, ocfg: AdamWConfig):
+    is_def = lambda x: isinstance(x, ParamDef)  # noqa: E731
+    master = jax.tree.map(
+        lambda d: dataclasses.replace(d, dtype=ocfg.master_dtype),
+        model_defs,
+        is_leaf=is_def,
+    )
+    moments = jax.tree.map(
+        lambda d: {
+            "m": moment_defs(d, ocfg.moment_dtype),
+            "v": moment_defs(d, ocfg.moment_dtype),
+        },
+        model_defs,
+        is_leaf=is_def,
+    )
+    return {
+        "opt": {
+            "step": pdef((), (), init="zeros", dtype="int32"),
+            "master": master,
+            "moments": moments,
+        },
+        "rng": pdef((2,), (None,), init="zeros", dtype="uint32"),
+    }
+
+
+def init_train_state(model_defs, params, ocfg: AdamWConfig, seed: int = 0):
+    return {
+        "opt": adamw_init(params, ocfg),
+        "rng": jax.random.key_data(jax.random.PRNGKey(seed)).astype(
+            jnp.uint32
+        ),
+    }
+
+
+def train_state_shardings(model_defs, ocfg: AdamWConfig, mesh: Mesh):
+    defs = train_state_defs(model_defs, ocfg)
+    specs = param_specs(defs, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    def one(x):
+        if hasattr(x, "ndim") and x.ndim >= 1:
+            return NamedSharding(
+                mesh,
+                P(("pod", "data") if "pod" in mesh.axis_names else "data"),
+            )
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_tree)

@@ -1,0 +1,58 @@
+"""Shared fixtures for the WLSH framework test suite.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+must see the single real CPU device (the 512-device override is strictly
+dryrun.py's, per the multi-pod dry-run spec).  Multi-device engine tests
+spawn subprocesses that set the flag themselves.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    from repro.core.datagen import make_dataset
+
+    return make_dataset(n=2_000, d=24, value_range=10_000.0, seed=1)
+
+
+@pytest.fixture(scope="session")
+def small_weights():
+    from repro.core.datagen import make_weight_set
+
+    return make_weight_set(size=12, d=24, n_subset=3, n_subrange=10, seed=2)
+
+
+@pytest.fixture(scope="session")
+def plan_cfg():
+    from repro.core.params import PlanConfig
+
+    return PlanConfig(p=2.0, c=3, n=2_000, gamma_n=100.0)
+
+
+@pytest.fixture(scope="session")
+def built_index(small_data, small_weights, plan_cfg):
+    from repro.core.wlsh import WLSHIndex
+
+    return WLSHIndex(
+        small_data,
+        small_weights,
+        plan_cfg,
+        tau=500.0,
+        v=6,
+        v_prime=6,
+        use_reduction=True,
+        seed=0,
+    )

@@ -1,0 +1,72 @@
+"""Collision-probability functions: closed forms, quadrature, Assumption 1."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.collision import (
+    collision_prob,
+    collision_prob_l1,
+    collision_prob_l2,
+    _collision_prob_numeric,
+)
+
+
+def test_closed_form_l2_matches_quadrature():
+    r = np.geomspace(0.05, 50.0, 40)
+    closed = collision_prob_l2(r, w=4.0)
+    numeric = _collision_prob_numeric(r, w=4.0, p=2.0, n_quad=4096)
+    np.testing.assert_allclose(closed, numeric, atol=2e-3)
+
+
+def test_closed_form_l1_matches_quadrature():
+    r = np.geomspace(0.05, 50.0, 40)
+    closed = collision_prob_l1(r, w=4.0)
+    numeric = _collision_prob_numeric(r, w=4.0, p=1.0, n_quad=4096)
+    np.testing.assert_allclose(closed, numeric, atol=2e-3)
+
+
+@pytest.mark.parametrize("p", [0.5, 1.0, 1.5, 2.0])
+def test_assumption1_monotone_decreasing(p):
+    """Paper Assumption 1: P(r) inversely proportional to (decreasing in) r."""
+    r = np.geomspace(0.01, 100.0, 200)
+    pr = collision_prob(r, w=4.0, p=p)
+    assert np.all(np.diff(pr) <= 1e-12)
+
+
+@pytest.mark.parametrize("p", [0.5, 1.0, 1.5, 2.0])
+def test_bounds_and_limits(p):
+    r = np.geomspace(1e-3, 1e4, 64)
+    pr = collision_prob(r, w=4.0, p=p)
+    assert np.all(pr >= 0.0) and np.all(pr <= 1.0)
+    # r -> 0: always collide;  r -> inf: never collide.
+    assert collision_prob(1e-6, 4.0, p) > 0.99
+    assert collision_prob(1e6, 4.0, p) < 0.01
+
+
+@given(
+    r=st.floats(0.01, 1e3),
+    w=st.floats(0.1, 100.0),
+    p=st.sampled_from([0.5, 0.8, 1.0, 1.3, 2.0]),
+)
+def test_property_valid_probability(r, w, p):
+    pr = collision_prob(r, w, p)
+    assert 0.0 <= pr <= 1.0
+
+
+def test_scale_invariance():
+    """P depends on r/w only: P(r, w) == P(ar, aw)."""
+    r = np.geomspace(0.1, 10.0, 16)
+    for p in (1.0, 2.0, 1.5):
+        a = collision_prob(r, 4.0, p)
+        b = collision_prob(3.7 * r, 3.7 * 4.0, p)
+        np.testing.assert_allclose(a, b, atol=3e-3)
+
+
+def test_rejects_bad_args():
+    with pytest.raises(ValueError):
+        collision_prob(1.0, -1.0, 2.0)
+    with pytest.raises(ValueError):
+        collision_prob(1.0, 4.0, 2.5)

@@ -1,0 +1,113 @@
+"""Theorem 1 bounds for derived weighted LSH families (the paper's core).
+
+The central property test: for any x, y, W, W' with D_{W'}(x,y) <= R it must
+hold that D_W(x,y) <= R^up, and for D_{W'}(x,y) >= cR it must hold that
+D_W(x,y) >= (cR)^down.  This is exactly the correctness condition the WLSH
+parameter planning relies on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.derived import angular_bounds, derived_sensitivity, ratio_bounds
+from repro.core.distances import (
+    weighted_angular_np,
+    weighted_lp_np,
+)
+
+_dim = st.integers(2, 16)
+
+
+@st.composite
+def _pair_weights_points(draw):
+    d = draw(_dim)
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    W = rng.uniform(1.0, 10.0, d)
+    Wp = rng.uniform(1.0, 10.0, d)
+    x = rng.uniform(0, 1000.0, d)
+    y = rng.uniform(0, 1000.0, d)
+    return W, Wp, x, y
+
+
+@given(_pair_weights_points(), st.sampled_from([0.5, 1.0, 1.5, 2.0]))
+def test_theorem1_lp_bounds(pack, p):
+    W, Wp, x, y = pack
+    hi, lo = ratio_bounds(W, Wp[None, :])
+    hi, lo = float(hi[0]), float(lo[0])
+    d_wp = float(weighted_lp_np(x, y, Wp, p))
+    d_w = float(weighted_lp_np(x, y, W, p))
+    # R^up with R = D_{W'}(x,y):  D_W <= D_{W'} * max_i(w_i/w'_i)
+    assert d_w <= d_wp * hi * (1 + 1e-9)
+    # (cR)^down with cR = D_{W'}(x,y):  D_W >= D_{W'} * min_i(w_i/w'_i)
+    assert d_w >= d_wp * lo * (1 - 1e-9)
+
+
+def test_ratio_bounds_vectorized_matches_loop():
+    rng = np.random.default_rng(0)
+    W = rng.uniform(1, 10, 12)
+    T = rng.uniform(1, 10, (40, 12))
+    hi, lo = ratio_bounds(W, T)
+    ref = W[None, :] / T
+    np.testing.assert_allclose(hi, ref.max(axis=1), rtol=1e-6)
+    np.testing.assert_allclose(lo, ref.min(axis=1), rtol=1e-6)
+
+
+@pytest.mark.parametrize("v", [1, 2, 4])
+def test_bound_relaxation_order_statistics(v):
+    rng = np.random.default_rng(1)
+    W = rng.uniform(1, 10, 16)
+    T = rng.uniform(1, 10, (10, 16))
+    hi, lo = ratio_bounds(W, T, v=v, v_prime=v)
+    ratios = np.sort(W[None, :] / T, axis=1)
+    np.testing.assert_allclose(hi, ratios[:, -v], rtol=1e-6)
+    np.testing.assert_allclose(lo, ratios[:, v - 1], rtol=1e-6)
+
+
+def test_relaxation_tightens_with_v():
+    """v > 1 gives hi' <= hi and lo' >= lo -> smaller beta (Eq. 11)."""
+    rng = np.random.default_rng(2)
+    W = rng.uniform(1, 10, 32)
+    T = rng.uniform(1, 10, (20, 32))
+    hi1, lo1 = ratio_bounds(W, T, v=1, v_prime=1)
+    hi4, lo4 = ratio_bounds(W, T, v=4, v_prime=4)
+    assert np.all(hi4 <= hi1 + 1e-12)
+    assert np.all(lo4 >= lo1 - 1e-12)
+
+
+def test_derived_sensitivity_usefulness():
+    # identical weights: x_up = x < y_down = y -> useful
+    x_up, y_down, useful = derived_sensitivity(
+        np.array([1.0]), np.array([3.0]), np.array([1.0]), np.array([1.0])
+    )
+    assert useful[0] and x_up[0] == 1.0 and y_down[0] == 3.0
+    # wildly different weights: hi/lo spread kills usefulness
+    _, _, useless = derived_sensitivity(
+        np.array([1.0]), np.array([3.0]), np.array([10.0]), np.array([0.1])
+    )
+    assert not useless[0]
+
+
+def test_self_derivation_is_exact():
+    """H_{W->W} must recover the underlying family: hi == lo == 1."""
+    rng = np.random.default_rng(3)
+    W = rng.uniform(1, 10, 24)
+    hi, lo = ratio_bounds(W, W[None, :])
+    np.testing.assert_allclose(hi, 1.0, rtol=1e-9)
+    np.testing.assert_allclose(lo, 1.0, rtol=1e-9)
+
+
+@given(_pair_weights_points())
+def test_theorem1_angular_bounds(pack):
+    W, Wp, x, y = pack
+    R = float(weighted_angular_np(x, y, Wp))
+    if R < 1e-6 or R > np.pi - 1e-6:
+        return
+    d_w = float(weighted_angular_np(x, y, W))
+    r_up, _ = angular_bounds(W, Wp, R, c=2.0)
+    assert d_w <= r_up + 1e-7
+    # lower bound at cR: use cR = the actual distance (R' := R/c)
+    _, cr_down = angular_bounds(W, Wp, R / 2.0, c=2.0)
+    assert d_w >= cr_down - 1e-7

@@ -1,0 +1,97 @@
+"""Weighted distance functions (Definition 4) + radius bounds."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.distances import (
+    radius_bounds,
+    weighted_angular_np,
+    weighted_hamming_np,
+    weighted_lp,
+    weighted_lp_np,
+)
+
+
+@st.composite
+def _xyw(draw):
+    d = draw(st.integers(2, 12))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    return (
+        rng.uniform(-100, 100, d),
+        rng.uniform(-100, 100, d),
+        rng.uniform(0.5, 10, d),
+    )
+
+
+@given(_xyw(), st.sampled_from([0.5, 1.0, 1.5, 2.0]))
+def test_weighted_lp_is_rescaled_lp(pack, p):
+    """D_W(x, y) == D(W o x, W o y) — the identity WLSH is built on."""
+    x, y, w = pack
+    direct = weighted_lp_np(x, y, w, p)
+    scaled = weighted_lp_np(x * w, y * w, np.ones_like(w), p)
+    np.testing.assert_allclose(direct, scaled, rtol=1e-9)
+
+
+@given(_xyw())
+def test_metric_axioms_p_ge_1(pack):
+    x, y, w = pack
+    for p in (1.0, 2.0):
+        assert weighted_lp_np(x, x, w, p) == pytest.approx(0.0, abs=1e-9)
+        np.testing.assert_allclose(
+            weighted_lp_np(x, y, w, p), weighted_lp_np(y, x, w, p)
+        )
+        z = (x + y) / 2
+        lhs = weighted_lp_np(x, y, w, p)
+        rhs = weighted_lp_np(x, z, w, p) + weighted_lp_np(z, y, w, p)
+        assert lhs <= rhs + 1e-9
+
+
+def test_jax_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-10, 10, (5, 8)).astype(np.float32)
+    y = rng.uniform(-10, 10, (5, 8)).astype(np.float32)
+    w = rng.uniform(1, 10, 8).astype(np.float32)
+    for p in (0.5, 1.0, 2.0):
+        a = np.asarray(weighted_lp(x, y, w, p))
+        b = weighted_lp_np(x, y, w.astype(np.float64), p)
+        np.testing.assert_allclose(a, b, rtol=2e-4)
+
+
+def test_weighted_hamming():
+    x = np.array([0, 1, 1, 0])
+    y = np.array([0, 0, 1, 1])
+    w = np.array([5.0, 2.0, 3.0, 7.0])
+    assert weighted_hamming_np(x, y, w) == pytest.approx(9.0)
+
+
+def test_weighted_angular_range():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=16)
+    w = rng.uniform(1, 10, 16)
+    assert weighted_angular_np(x, x, w) == pytest.approx(0.0, abs=1e-6)
+    assert weighted_angular_np(x, -x, w) == pytest.approx(np.pi, abs=1e-6)
+
+
+@pytest.mark.parametrize("p", [1.0, 2.0])
+def test_radius_bounds_achievable(p):
+    """r_min/r_max must bound all achievable integer-grid distances."""
+    rng = np.random.default_rng(2)
+    d, vr = 6, 100.0
+    w = rng.uniform(1, 10, d)
+    r_min, r_max = radius_bounds(w, vr, p)
+    pts = rng.integers(0, int(vr) + 1, (200, d)).astype(float)
+    qts = rng.integers(0, int(vr) + 1, (200, d)).astype(float)
+    dist = weighted_lp_np(pts, qts, w, p)
+    nz = dist[dist > 0]
+    assert np.all(nz >= r_min - 1e-9)
+    assert np.all(dist <= r_max + 1e-9)
+    # extremes are achievable
+    lo = np.zeros(d)
+    hi = np.full(d, vr)
+    assert weighted_lp_np(lo, hi, w, p) == pytest.approx(r_max)
+    e = np.zeros(d)
+    e[np.argmin(w)] = 1.0
+    assert weighted_lp_np(lo, e, w, p) == pytest.approx(r_min)

@@ -1,0 +1,223 @@
+"""Pallas kernel sweeps vs the pure-jnp ref.py oracles.
+
+Per the kernel contract:
+  * freq_level: exact integer match (no float path after the codes);
+  * hash_encode: exact match except at floor boundaries, where independent
+    f32 summation orders may legitimately differ by one bucket (|diff| <= 1
+    and only where the pre-floor value is within eps of an integer);
+  * weighted_lp: allclose in f32.
+
+All Pallas calls run with interpret=True on CPU (the kernel body itself is
+executed), matching how the kernels are validated off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+# Pallas-interpret runs grid cells in Python -> keep shapes moderate.
+_SHAPES = [
+    (64, 16, 24, 4),  # (n, d, beta, Q)
+    (300, 40, 70, 9),
+    (257, 33, 128, 3),  # non-multiples exercise wrapper padding
+    (512, 128, 64, 8),
+]
+
+
+def _mk(n, d, beta, Q, seed=0, int_vals=False):
+    rng = np.random.default_rng(seed)
+    if int_vals:
+        pts = rng.integers(0, 1000, (n, d)).astype(np.float32)
+        qs = rng.integers(0, 1000, (Q, d)).astype(np.float32)
+    else:
+        pts = rng.uniform(0, 1000, (n, d)).astype(np.float32)
+        qs = rng.uniform(0, 1000, (Q, d)).astype(np.float32)
+    w = rng.uniform(1, 10, d).astype(np.float32)
+    proj = rng.normal(0, 1, (d, beta)).astype(np.float32)
+    b = rng.uniform(0, 729.0, beta)
+    b_int = np.floor(b).astype(np.int32)
+    b_frac = (b - b_int).astype(np.float32)
+    return pts, qs, w, proj, b_int, b_frac
+
+
+def _boundary_ok(diff, u):
+    """Mismatches must be |1| and only where u is ~at an integer boundary."""
+    if not diff.any():
+        return True
+    if np.abs(diff[diff != 0]).max() > 1:
+        return False
+    frac = np.abs(u - np.round(u))
+    return bool(np.all(frac[diff != 0] < 1e-2))
+
+
+@pytest.mark.parametrize("shape", _SHAPES, ids=str)
+def test_hash_encode_sweep(shape):
+    n, d, beta, Q = shape
+    pts, _, w, proj, b_int, b_frac = _mk(n, d, beta, Q)
+    width = 37.5
+    got_ref = np.array(
+        ops.hash_encode(pts, w, proj, b_int, b_frac, width, use_pallas=False)
+    )
+    got_pal = np.array(
+        ops.hash_encode(pts, w, proj, b_int, b_frac, width, use_pallas=True,
+                        interpret=True, bn=128, bb=64, bd=64)
+    )
+    u = (pts * w) @ proj / width + b_frac
+    assert _boundary_ok(got_pal - got_ref, u)
+    mismatch = np.mean(got_pal != got_ref)
+    assert mismatch < 1e-3  # boundary jitter must stay rare
+
+
+@pytest.mark.parametrize("shape", _SHAPES, ids=str)
+@pytest.mark.parametrize("c,n_levels", [(2, 10), (3, 7)])
+def test_freq_level_sweep(shape, c, n_levels):
+    n, d, beta, Q = shape
+    pts, qs, w, proj, b_int, b_frac = _mk(n, d, beta, Q, seed=1)
+    cp = np.array(ops.hash_encode(pts, w, proj, b_int, b_frac, 10.0,
+                                  use_pallas=False))
+    cq = np.array(ops.hash_encode(qs, w, proj, b_int, b_frac, 10.0,
+                                  use_pallas=False))
+    rng = np.random.default_rng(2)
+    mu = rng.integers(1, max(2, beta // 3), Q).astype(np.int32)
+    beta_q = rng.integers(1, beta + 1, Q).astype(np.int32)
+    got_ref = np.array(ops.freq_level(cp, cq, mu, c=c, n_levels=n_levels,
+                                      beta_q=beta_q, use_pallas=False))
+    got_pal = np.array(ops.freq_level(cp, cq, mu, c=c, n_levels=n_levels,
+                                      beta_q=beta_q, use_pallas=True,
+                                      interpret=True, bn=128))
+    np.testing.assert_array_equal(got_ref, got_pal)
+
+
+def test_freq_level_semantics_bruteforce():
+    """ref.freq_level == brute-force per-level collision counting."""
+    rng = np.random.default_rng(3)
+    n, beta, Q, c, L = 80, 12, 5, 3, 6
+    cp = rng.integers(-(c**L), c**L, (n, beta)).astype(np.int32)
+    cq = rng.integers(-(c**L), c**L, (Q, beta)).astype(np.int32)
+    mu = rng.integers(1, 6, Q).astype(np.int32)
+    got = np.array(ops.freq_level(cp, cq, mu, c=c, n_levels=L,
+                                  use_pallas=False))
+    for qi in range(Q):
+        for pi in range(n):
+            first = L + 1
+            for j in range(L + 1):
+                cnt = np.sum(
+                    (cp[pi] // (c**j)) == (cq[qi] // (c**j))
+                )
+                if cnt >= mu[qi]:
+                    first = j
+                    break
+            assert got[qi, pi] == first
+
+
+def test_freq_level_monotone_in_mu():
+    """Larger mu can only delay the first frequent level."""
+    rng = np.random.default_rng(4)
+    cp = rng.integers(0, 729, (64, 16)).astype(np.int32)
+    cq = rng.integers(0, 729, (4, 16)).astype(np.int32)
+    prev = None
+    for mu in (1, 3, 6, 12):
+        cur = np.array(
+            ops.freq_level(cp, cq, mu, c=3, n_levels=6, use_pallas=False)
+        )
+        if prev is not None:
+            assert np.all(cur >= prev)
+        prev = cur
+
+
+def test_count_level_matches_numpy():
+    rng = np.random.default_rng(5)
+    cp = rng.integers(0, 500, (100, 20)).astype(np.int32)
+    cq = rng.integers(0, 500, (6, 20)).astype(np.int32)
+    for lvl in (0, 1, 3):
+        got = np.array(ref.count_level_ref(cp, cq, c=3, level=lvl))
+        want = (
+            (cq[:, None, :] // 3**lvl) == (cp[None, :, :] // 3**lvl)
+        ).sum(-1)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", _SHAPES[:3], ids=str)
+@pytest.mark.parametrize("p", [0.5, 1.0, 1.5])
+def test_weighted_lp_sweep(shape, p):
+    n, d, beta, Q = shape
+    pts, qs, w, *_ = _mk(n, d, beta, Q, seed=6)
+    got_ref = np.array(ops.weighted_lp_dist(qs, pts, w, p, use_pallas=False))
+    got_pal = np.array(ops.weighted_lp_dist(qs, pts, w, p, use_pallas=True,
+                                            interpret=True, bn=128, bd=64))
+    np.testing.assert_allclose(got_ref, got_pal, rtol=2e-4, atol=2e-2)
+
+
+@pytest.mark.parametrize("p", [1.0, 2.0])
+def test_weighted_lp_vs_host_oracle(p):
+    from repro.core.distances import weighted_lp_np
+
+    pts, qs, w, *_ = _mk(150, 32, 8, 7, seed=7)
+    got = np.array(ops.weighted_lp_dist(qs, pts, w, p))
+    want = np.stack([weighted_lp_np(pts, q, w.astype(np.float64), p)
+                     for q in qs])
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_weighted_lp_dtypes(dtype):
+    pts, qs, w, *_ = _mk(64, 16, 4, 3, seed=8)
+    got = np.array(
+        ops.weighted_lp_dist(
+            jnp.asarray(qs, dtype), jnp.asarray(pts, dtype),
+            jnp.asarray(w, jnp.float32), 2.0, use_pallas=False,
+        )
+    )
+    ref32 = np.array(ops.weighted_lp_dist(qs, pts, w, 2.0, use_pallas=False))
+    tol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(got, ref32, rtol=tol, atol=tol * 1e3)
+
+
+@settings(max_examples=15)
+@given(
+    n=st.integers(8, 96),
+    beta=st.integers(2, 24),
+    q=st.integers(1, 6),
+    c=st.sampled_from([2, 3]),
+    seed=st.integers(0, 10_000),
+)
+def test_property_freq_level_pallas_equals_ref(n, beta, q, c, seed):
+    rng = np.random.default_rng(seed)
+    L = 5
+    cp = rng.integers(-(c**L) * 2, (c**L) * 2, (n, beta)).astype(np.int32)
+    cq = rng.integers(-(c**L) * 2, (c**L) * 2, (q, beta)).astype(np.int32)
+    mu = rng.integers(1, beta + 1, q).astype(np.int32)
+    a = np.array(ops.freq_level(cp, cq, mu, c=c, n_levels=L,
+                                use_pallas=False))
+    b = np.array(ops.freq_level(cp, cq, mu, c=c, n_levels=L, use_pallas=True,
+                                interpret=True, bn=64))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_hash_encode_matches_host_family():
+    """Kernel path must agree with core.families.hash_codes_np (the planner's
+    oracle) — the int split of b* is exactness-critical."""
+    from repro.core.families import hash_codes_np, sample_lp_family
+
+    rng = np.random.default_rng(9)
+    pts = rng.integers(0, 10_000, (128, 24)).astype(np.float32)
+    wc = rng.uniform(1, 10, 24)
+    fam = sample_lp_family(d=24, beta=16, p=2.0, width=50.0,
+                           center_weight=wc, ratio_cap=1e5, c=3, seed=2)
+    want = hash_codes_np(pts, fam)
+    got = np.array(
+        ops.hash_encode(
+            pts, fam.center_weight, fam.proj, fam.b_int, fam.b_frac,
+            fam.width, use_pallas=False,
+        )
+    )
+    diff = got - want
+    u = (pts * fam.center_weight) @ fam.proj / fam.width + fam.b_frac
+    assert _boundary_ok(diff, u)
+    assert np.mean(diff != 0) < 1e-3

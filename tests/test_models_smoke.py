@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train/decode
+step on CPU, shape + finiteness assertions (assignment requirement f)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, ShapeConfig, get_config, reduced
+from repro.models import build_model, count_params, init_params, make_batch
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import init_train_state, make_train_step
+
+_LM_ARCHS = [a for a in ARCHS if a != "wlsh_index"]
+_SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    return {}
+
+
+def _build(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg, mesh=None)
+    params = init_params(model.defs(), jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", _LM_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params = _build(arch)
+    batch = make_batch(cfg, _SMOKE_SHAPE, seed=1)
+    x = model.hidden_states(params, batch)
+    assert x.shape == (2, 32, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(x.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", _LM_ARCHS)
+def test_train_step_runs_and_loss_finite(arch):
+    cfg, model, params = _build(arch)
+    batch = make_batch(cfg, _SMOKE_SHAPE, seed=2)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step = make_train_step(model, ocfg)
+    state = init_train_state(model.defs(), params, ocfg)
+    state, metrics = jax.jit(step)(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss)
+    # random tokens: loss ~= ln(vocab)
+    assert 0.0 < loss < 2.0 * np.log(cfg.vocab)
+    assert int(metrics["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", _LM_ARCHS)
+def test_decode_step_matches_cache_semantics(arch):
+    cfg, model, params = _build(arch)
+    B, cache_len = 2, 16
+    cache = model.init_cache(B, cache_len)
+    tokens = jnp.array([3, 5], jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(
+        params, cache, tokens, jnp.int32(0)
+    )
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache must actually change
+    changed = any(
+        bool(jnp.any(a != b))
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "mamba2_780m", "zamba2_1p2b"])
+def test_prefill_decode_consistency(arch):
+    """Greedy next-token from prefill == decode-steps-by-one (same params)."""
+    cfg, model, params = _build(arch)
+    B, S = 1, 8
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab, dtype=jnp.int32)
+    full_logits = model.prefill(params, {"tokens": toks})
+    cache = model.init_cache(B, S + 1)
+    logits = None
+    for t in range(S):
+        logits, cache = model.decode_step(
+            params, cache, toks[:, t], jnp.int32(t)
+        )
+    np.testing.assert_allclose(
+        np.asarray(full_logits, np.float32),
+        np.asarray(logits, np.float32),
+        rtol=0.06, atol=0.05,  # bf16 accumulation differences
+    )
+
+
+def test_param_counts_full_configs():
+    """Full (unreduced) configs must land near their nameplate sizes."""
+    from repro.models.params import abstract_params
+
+    expect = {
+        "llama3_405b": (380e9, 430e9),
+        "olmo_1b": (0.9e9, 1.6e9),
+        "minicpm_2b": (2.0e9, 3.3e9),
+        "h2o_danube_3_4b": (3.0e9, 4.5e9),
+        "chameleon_34b": (32e9, 36e9),
+        "mamba2_780m": (0.6e9, 1.0e9),
+        "zamba2_1p2b": (1.0e9, 1.6e9),
+        # assigned shape is 48L x 64e x d_ff 1408 (the HF model is 27L);
+        # at the assigned depth the routed experts alone are ~26.6B.
+        "moonshot_v1_16b_a3b": (25e9, 31e9),
+        "olmoe_1b_7b": (6e9, 8e9),
+        "musicgen_medium": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        model = build_model(cfg, mesh=None)
+        n = count_params(model.defs())
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_nonparametric_ln_olmo():
+    """olmo-1b uses non-parametric LN: no scale/bias params in norms."""
+    cfg = get_config("olmo_1b")
+    assert cfg.norm == "nonparametric_ln"
+    model = build_model(reduced(cfg), mesh=None)
+    defs = model.defs()
+    assert defs["final_norm"] == {} or not jax.tree.leaves(defs["final_norm"])
+
+
+def test_swa_ring_buffer_window():
+    """h2o-danube SWA cache is window-sized, not seq-sized."""
+    cfg = reduced(get_config("h2o_danube_3_4b"))
+    assert cfg.sliding_window > 0
+    model = build_model(cfg, mesh=None)
+    shapes = model.cache_shapes(batch=2, cache_len=1_000)
+    assert shapes["k"].shape[2] == cfg.sliding_window
+
+
+def test_moe_routing_is_sparse():
+    """MoE forward must route each token to exactly top_k experts."""
+    from repro.models.moe import capacity
+
+    cfg = reduced(get_config("olmoe_1b_7b"))
+    assert cfg.n_experts == 8 and cfg.top_k == 2
+    c = capacity(64, cfg)
+    assert c >= 64 * cfg.top_k // cfg.n_experts

@@ -1,0 +1,89 @@
+"""beta/mu planning math (Eqs. 4-5 and 11-12) + threshold reduction."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.params import (
+    PlanConfig,
+    beta_mu,
+    threshold_reduction_factor,
+    z_value,
+)
+
+
+def _cfg(**kw):
+    base = dict(p=2.0, c=3.0, eps=0.01, gamma_n=100.0, n=400_000)
+    base.update(kw)
+    return PlanConfig(**base)
+
+
+def test_z_value_paper_defaults():
+    cfg = _cfg()
+    z = z_value(cfg.eps, cfg.gamma)
+    assert z == pytest.approx(
+        np.sqrt(np.log(2.0 / cfg.gamma) / np.log(1.0 / cfg.eps))
+    )
+    assert z > 1.0  # paper regime
+
+
+def test_beta_mu_c2lsh_case():
+    """x_up = x, y_down = cx (no derivation) recovers C2LSH Eqs. 4-5."""
+    cfg = _cfg()
+    x = 1.0
+    beta, mu, p1, p2 = beta_mu(x, cfg.c * x, width=1.0, cfg=cfg)
+    assert np.isfinite(beta[0]) and beta[0] >= 1
+    assert 0 < p2[0] < p1[0] < 1
+    # mu must sit strictly between beta*P2 and beta*P1 (separation works)
+    assert beta[0] * p2[0] < mu[0] < beta[0] * p1[0]
+
+
+def test_beta_increases_with_n():
+    b_small, *_ = beta_mu(1.0, 3.0, 1.0, _cfg(n=100_000))
+    b_big, *_ = beta_mu(1.0, 3.0, 1.0, _cfg(n=1_600_000))
+    assert b_big[0] >= b_small[0]
+
+
+def test_beta_decreases_with_c():
+    cfg2 = _cfg(c=2.0)
+    cfg6 = _cfg(c=6.0)
+    b2, *_ = beta_mu(1.0, 2.0, 1.0, cfg2)
+    b6, *_ = beta_mu(1.0, 6.0, 1.0, cfg6)
+    assert b6[0] <= b2[0]
+
+
+def test_beta_grows_as_bounds_shrink():
+    """Worse derived bounds (x_up closer to y_down) -> more tables."""
+    cfg = _cfg()
+    gaps = [(1.0, 3.0), (1.5, 2.5), (1.8, 2.2)]
+    betas = [beta_mu(x, y, 1.0, cfg)[0][0] for x, y in gaps]
+    assert betas[0] <= betas[1] <= betas[2]
+
+
+def test_beta_infinite_when_useless():
+    cfg = _cfg()
+    beta, mu, _, _ = beta_mu(3.0, 1.0, 1.0, cfg)  # x_up > y_down
+    assert np.isinf(beta[0]) and np.isinf(mu[0])
+
+
+def test_beta_cap():
+    cfg = _cfg()
+    # a nearly-degenerate gap forces beta beyond any small cap
+    beta, *_ = beta_mu(2.9, 3.0, 1.0, cfg, beta_cap=100)
+    assert np.isinf(beta[0])
+
+
+@pytest.mark.parametrize("p", [1.0, 2.0])
+def test_threshold_reduction_below_one(p):
+    x = threshold_reduction_factor(np.array([1.0, 2.0, 5.0]), 3.0, 1.0, p)
+    assert np.all(x < 1.0) and np.all(x > 0.0)
+
+
+def test_beta_log_n_scaling():
+    """Paper Table 1: tables grow ~log n at fixed gamma*n."""
+    ns = [10**5, 10**6, 10**7]
+    betas = [float(beta_mu(1.0, 3.0, 1.0, _cfg(n=n))[0][0]) for n in ns]
+    # ratios of (beta / ln n) stay within a modest constant band
+    ratios = [b / np.log(n) for b, n in zip(betas, ns)]
+    assert max(ratios) / min(ratios) < 2.0

@@ -1,0 +1,104 @@
+"""Partition (Function Partition + greedy WSC): optimization invariants."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.datagen import make_weight_set
+from repro.core.params import PlanConfig
+from repro.core.partition import pairwise_beta, partition, tau_min
+
+_VR = 10_000.0
+
+
+def _cfg(**kw):
+    base = dict(p=2.0, c=3.0, gamma_n=100.0, n=400_000)
+    base.update(kw)
+    return PlanConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return make_weight_set(size=24, d=16, n_subset=4, n_subrange=10, seed=7)
+
+
+def test_partition_is_disjoint_cover(weights):
+    cfg = _cfg()
+    res = partition(weights, cfg, _VR, tau=500.0, v=4, v_prime=4)
+    m = len(weights)
+    assert res.group_of.shape == (m,)
+    assert np.all(res.group_of >= 0)
+    seen = set()
+    for gi, g in enumerate(res.groups):
+        ids = set(int(i) for i in g.member_ids)
+        assert not (ids & seen), "groups must be disjoint"
+        seen |= ids
+        assert np.all(res.group_of[g.member_ids] == gi)
+    assert seen == set(range(m)), "groups must cover S"
+
+
+def test_per_group_tables_below_tau(weights):
+    tau = 500.0
+    res = partition(weights, _cfg(), _VR, tau=tau, v=4, v_prime=4)
+    for g in res.groups:
+        assert g.beta_group <= tau
+        assert np.all(np.isfinite(g.betas))
+        assert g.beta_group == int(np.max(g.betas))
+    assert res.beta_total == sum(g.beta_group for g in res.groups)
+
+
+def test_beta_total_not_worse_than_naive(weights):
+    """The partition must never need more tables than one-group-per-W."""
+    cfg = _cfg()
+    B, _, _, _ = pairwise_beta(weights, cfg, _VR, v=4, v_prime=4)
+    naive = float(np.sum(np.diag(B)))
+    res = partition(weights, cfg, _VR, tau=max(tau_min(B), 500.0), v=4, v_prime=4)
+    assert res.beta_total <= naive + 1e-9
+
+
+def test_tau_below_tau_min_raises(weights):
+    cfg = _cfg()
+    B, _, _, _ = pairwise_beta(weights, cfg, _VR, v=4, v_prime=4)
+    with pytest.raises(ValueError):
+        partition(weights, cfg, _VR, tau=0.5 * tau_min(B), v=4, v_prime=4)
+
+
+def test_identical_weights_share_one_group():
+    w = np.full((8, 16), 3.0)
+    res = partition(w, _cfg(), _VR, tau=10_000.0)
+    assert len(res.groups) == 1
+    g = res.groups[0]
+    # all members identical -> identical beta; group beta == member beta
+    assert np.allclose(g.betas, g.betas[0])
+    assert g.beta_group == g.betas[0]
+
+
+def test_bound_relaxation_reduces_tables(weights):
+    """Paper Sec. 5.2.1 / Table 6: beta^br << beta (strict Theorem 1)."""
+    cfg = _cfg()
+    strict = partition(weights, cfg, _VR, tau=1e9, v=1, v_prime=1)
+    relaxed = partition(weights, cfg, _VR, tau=1e9, v=4, v_prime=4)
+    assert relaxed.beta_total <= strict.beta_total
+
+
+def test_group_parameters_sane(weights):
+    res = partition(weights, _cfg(), _VR, tau=500.0, v=4, v_prime=4)
+    for g in res.groups:
+        assert np.all(g.mus <= g.betas + 1e-9)
+        assert np.all(g.mus_reduced <= g.mus + 1e-9)
+        assert np.all(g.mus_reduced >= 1.0)
+        assert g.width > 0
+        assert g.ratio_cap >= 1.0
+        assert np.all(g.n_levels >= 1)
+        # member slots index correctly
+        for slot, wid in enumerate(g.member_ids):
+            assert res.member_slot[wid] == slot
+
+
+def test_mu_reduced_matches_c2lsh_extension(weights):
+    """mu_hat = X * mu with X = P((c^2 r)^up) / P((r)^up) < 1."""
+    res = partition(weights, _cfg(), _VR, tau=500.0, v=4, v_prime=4)
+    for g in res.groups:
+        ratio = g.mus_reduced / np.maximum(g.mus, 1e-12)
+        assert np.all(ratio <= 1.0 + 1e-9)

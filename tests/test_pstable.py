@@ -1,0 +1,82 @@
+"""p-stable sampling + density evaluation."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pstable import (
+    pstable_pdf,
+    pstable_pdf_abs,
+    sample_pstable,
+    sample_pstable_np,
+)
+
+
+def test_p2_is_standard_normal():
+    rng = np.random.default_rng(0)
+    x = sample_pstable_np(rng, 2.0, (200_000,))
+    assert abs(np.mean(x)) < 0.02
+    assert abs(np.std(x) - 1.0) < 0.02
+
+
+def test_p1_is_cauchy():
+    rng = np.random.default_rng(0)
+    x = sample_pstable_np(rng, 1.0, (200_000,))
+    # Cauchy has no mean; check the IQR instead (exactly 2 for standard).
+    q1, q3 = np.percentile(x, [25, 75])
+    assert abs((q3 - q1) - 2.0) < 0.05
+
+
+@pytest.mark.parametrize("p", [0.5, 1.2, 1.8])
+def test_general_p_stability_property(p):
+    """Defining property: (X1 + X2) / 2^(1/p) is distributed like X."""
+    rng = np.random.default_rng(1)
+    n = 150_000
+    x1 = sample_pstable_np(rng, p, (n,))
+    x2 = sample_pstable_np(rng, p, (n,))
+    s = (x1 + x2) / 2.0 ** (1.0 / p)
+    # compare central quantiles (tails of stable laws are heavy/noisy)
+    qs = np.linspace(0.2, 0.8, 13)
+    a = np.quantile(x1, qs)
+    b = np.quantile(s, qs)
+    np.testing.assert_allclose(a, b, atol=0.05, rtol=0.05)
+
+
+def test_jax_matches_numpy_distribution():
+    key = jax.random.PRNGKey(0)
+    xj = np.asarray(sample_pstable(key, 1.5, (100_000,)))
+    rng = np.random.default_rng(2)
+    xn = sample_pstable_np(rng, 1.5, (100_000,))
+    qs = np.linspace(0.1, 0.9, 17)
+    np.testing.assert_allclose(
+        np.quantile(xj, qs), np.quantile(xn, qs), atol=0.05, rtol=0.05
+    )
+
+
+@pytest.mark.parametrize("p", [0.5, 1.0, 1.5, 2.0])
+def test_pdf_integrates_to_one(p):
+    x = np.linspace(-150.0, 150.0, 300_001)
+    f = pstable_pdf(x, p)
+    mass = np.trapezoid(f, x)
+    # heavy tails for small p make the finite integral < 1
+    assert 0.93 <= mass <= 1.005
+
+
+@pytest.mark.parametrize("p", [0.7, 1.3])
+def test_pdf_matches_histogram(p):
+    rng = np.random.default_rng(3)
+    x = sample_pstable_np(rng, p, (400_000,))
+    hist, edges = np.histogram(x[np.abs(x) < 5], bins=60, density=False)
+    centers = 0.5 * (edges[1:] + edges[:-1])
+    frac_in = np.mean(np.abs(x) < 5)
+    emp = hist / len(x) / np.diff(edges) * 1.0
+    ref = pstable_pdf(centers, p)
+    np.testing.assert_allclose(emp, ref, atol=0.012)
+    assert frac_in > 0.5
+
+
+def test_pdf_abs_zero_below_zero():
+    f = pstable_pdf_abs(np.array([-1.0, 0.5]), 1.5)
+    assert f[0] == 0.0 and f[1] > 0.0

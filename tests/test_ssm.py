@@ -1,0 +1,114 @@
+"""Mamba2 SSD: chunked scan == step-by-step recurrence; decode state flow."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models.params import init_params
+from repro.models.ssm import (
+    mamba2_block,
+    mamba2_decode_step,
+    ssm_defs,
+    ssm_state_shape,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mamba2_780m"))
+    cfg = dataclasses.replace(cfg, ssm_chunk=8)
+    params = init_params(ssm_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_chunked_equals_stepwise(setup):
+    """The SSD chunked path must equal running the recurrence token by
+    token — the state-space duality the architecture is named for."""
+    cfg, params = setup
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+
+    y_chunked, s_last = mamba2_block(params, x, cfg, mesh=None)
+
+    state = {
+        "ssm": jnp.zeros(ssm_state_shape(cfg, B)["ssm"], jnp.float32),
+        "conv": jnp.zeros(ssm_state_shape(cfg, B)["conv"], jnp.float32),
+    }
+    ys = []
+    for t in range(S):
+        y_t, state = mamba2_decode_step(params, x[:, t], cfg, None, state)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, axis=1)
+
+    np.testing.assert_allclose(
+        np.asarray(y_chunked, np.float32), np.asarray(y_step, np.float32),
+        rtol=2e-2, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(s_last), np.asarray(state["ssm"]), rtol=2e-2, atol=2e-3,
+    )
+
+
+def test_initial_state_continuation(setup):
+    """Processing [first half] then [second half from carried state] must
+    equal one full pass — the prefill-to-decode handoff invariant."""
+    cfg, params = setup
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_full, s_full = mamba2_block(params, x, cfg, mesh=None)
+    y_a, s_a = mamba2_block(params, x[:, : S // 2], cfg, mesh=None)
+    # NOTE: conv carry across the split is not part of mamba2_block's API
+    # (prefill always starts at position 0); feed the overlap explicitly.
+    # We check the *state* recurrence instead: second half step-by-step
+    # from s_a with the conv tail.
+    state = {
+        "ssm": s_a,
+        "conv": x_conv_tail(cfg, params, x[:, : S // 2]),
+    }
+    ys = []
+    for t in range(S // 2, S):
+        y_t, state = mamba2_decode_step(params, x[:, t], cfg, None, state)
+        ys.append(y_t)
+    y_b = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_full[:, S // 2 :], np.float32),
+        np.asarray(y_b, np.float32),
+        rtol=2e-2, atol=2e-3,
+    )
+
+
+def x_conv_tail(cfg, params, x_prefix):
+    """Conv carry after a prefix: last K-1 pre-conv xBC rows."""
+    dt_ = x_prefix.dtype
+    proj = x_prefix @ params["in_proj"].astype(dt_)
+    di = cfg.d_inner
+    gn = cfg.ssm_state
+    xBC = proj[..., di : 2 * di + 2 * gn]
+    return xBC[:, -(cfg.conv_kernel - 1):, :]
+
+
+def test_state_shape_contract(setup):
+    cfg, params = setup
+    shapes = ssm_state_shape(cfg, batch=3)
+    assert shapes["ssm"] == (3, cfg.ssm_heads, cfg.ssm_state,
+                             cfg.ssm_head_dim)
+    assert shapes["conv"] == (3, cfg.conv_kernel - 1,
+                              cfg.d_inner + 2 * cfg.ssm_state)
+
+
+def test_decay_clamp_no_nan(setup):
+    """Long sequences with large dt must not overflow the decay kernel."""
+    cfg, params = setup
+    big = jax.random.normal(jax.random.PRNGKey(3), (1, 64, cfg.d_model),
+                            jnp.float32) * 20.0
+    y, s = mamba2_block(params, big, cfg, mesh=None)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.all(jnp.isfinite(s)))

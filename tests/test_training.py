@@ -1,0 +1,162 @@
+"""Optimizer + train-loop substrate: AdamW semantics, schedules, moment
+quantization, stochastic rounding, microbatch-accumulation equivalence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training.optimizer import (
+    AdamWConfig,
+    _dequantize,
+    _quantize,
+    _sr_cast_bf16,
+    adamw_init,
+    adamw_update,
+    lr_schedule,
+)
+
+
+def test_adamw_descends_quadratic():
+    """Minimize ||x - t||^2; AdamW must reduce the loss monotonically-ish."""
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100, schedule="constant")
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    opt = adamw_init(params, cfg)
+
+    def loss_fn(p):
+        return jnp.sum((p["x"] - target) ** 2)
+
+    losses = []
+    for _ in range(60):
+        g = jax.grad(loss_fn)({"x": opt["master"]["x"]})
+        opt, _, _ = adamw_update(g, opt, cfg)
+        losses.append(float(loss_fn({"x": opt["master"]["x"]})))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+@pytest.mark.parametrize("sched", ["cosine", "wsd", "constant"])
+def test_lr_schedule_shapes(sched):
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      schedule=sched, decay_frac=0.2, min_lr_frac=0.1)
+    lr = np.array([float(lr_schedule(cfg, s)) for s in range(101)])
+    # warmup: monotone ramp to ~peak
+    assert np.all(np.diff(lr[:10]) > 0)
+    assert lr[0] == 0.0
+    if sched == "constant":
+        np.testing.assert_allclose(lr[10:], 1.0)
+    if sched == "wsd":
+        # stable plateau until decay_start = 80
+        np.testing.assert_allclose(lr[10:80], 1.0)
+        assert lr[100] == pytest.approx(0.1, rel=1e-5)
+        assert np.all(np.diff(lr[80:]) <= 1e-7)
+    if sched == "cosine":
+        assert lr[100] == pytest.approx(0.1, rel=1e-2)
+        assert np.all(np.diff(lr[11:]) <= 1e-7)
+
+
+def test_int8_quantization_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3.0, (8, 700)).astype(np.float32))
+    codes, scale, shape = _quantize(x)
+    y = _dequantize(codes, scale, x.shape)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    blk_max = np.asarray(jnp.max(jnp.abs(x)))
+    # blockwise int8: error bounded by scale/2 = blockmax/254
+    assert float(err.max()) <= blk_max / 127.0
+    rel = float(np.linalg.norm(err) / np.linalg.norm(np.asarray(x)))
+    assert rel < 0.01
+
+
+def test_sr_cast_unbiased():
+    x = jnp.full((200_000,), 1.0 + 2.0 ** -10, jnp.float32)  # between bf16 grid
+    key = jax.random.PRNGKey(1)
+    y = _sr_cast_bf16(x, key).astype(jnp.float32)
+    # stochastic rounding: mean preserved within noise, values on grid
+    assert abs(float(jnp.mean(y)) - float(x[0])) < 1e-4
+    assert set(np.unique(np.asarray(y))).issubset(
+        {np.float32(1.0), np.float32(1.0078125)}
+    )
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "bfloat16", "int8"])
+def test_moment_dtypes_still_converge(moment_dtype):
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      schedule="constant", moment_dtype=moment_dtype)
+    target = jnp.array([0.5, -1.5, 2.5, 0.1] * 64)  # 256-wide (one block)
+    params = {"x": jnp.zeros(256)}
+    opt = adamw_init(params, cfg)
+
+    def loss_fn(p):
+        return jnp.sum((p["x"] - target) ** 2)
+
+    for _ in range(80):
+        g = jax.grad(loss_fn)({"x": opt["master"]["x"]})
+        opt, _, _ = adamw_update(g, opt, cfg)
+    final = float(loss_fn({"x": opt["master"]["x"]}))
+    assert final < 5.0  # int8 moments converge slower but must converge
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1e-3, weight_decay=0.0,
+                      warmup_steps=0, schedule="constant")
+    params = {"x": jnp.zeros(4)}
+    opt = adamw_init(params, cfg)
+    g = {"x": jnp.full(4, 1e6)}
+    opt, _, metrics = adamw_update(g, opt, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+    # clipped: effective g tiny; but adam normalizes by sqrt(v) so update ~ lr
+    assert np.all(np.isfinite(np.asarray(opt["master"]["x"])))
+
+
+def test_microbatch_accumulation_equivalence():
+    """grad accumulation over 4 microbatches == single big batch."""
+    from repro.configs.base import ShapeConfig, get_config, reduced
+    from repro.models import build_model, init_params, make_batch
+    from repro.training.train_loop import init_train_state, make_train_step
+
+    cfg = reduced(get_config("olmo_1b"))
+    model = build_model(cfg, mesh=None)
+    params = init_params(model.defs(), jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+    batch = make_batch(cfg, ShapeConfig("s", 16, 8, "train"), seed=3)
+
+    s1 = init_train_state(model.defs(), params, ocfg)
+    s4 = jax.tree.map(jnp.copy, s1)
+    step1 = make_train_step(model, ocfg, microbatches=1)
+    step4 = make_train_step(model, ocfg, microbatches=4)
+    s1, m1 = jax.jit(step1)(s1, batch)
+    s4, m4 = jax.jit(step4)(s4, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=2e-2)
+    # parameters land close (not identical: accumulation reorders bf16 sums)
+    a = np.concatenate([np.ravel(x) for x in jax.tree.leaves(s1["opt"]["master"])])
+    b = np.concatenate([np.ravel(x) for x in jax.tree.leaves(s4["opt"]["master"])])
+    assert np.corrcoef(a, b)[0, 1] > 0.999
+
+
+def test_loss_decreases_on_markov_data():
+    """Tiny model must learn a markov stream in a few dozen steps."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import build_model, init_params
+    from repro.training.data import DataConfig, SyntheticStream
+    from repro.training.train_loop import init_train_state, make_train_step
+
+    cfg = reduced(get_config("olmo_1b"))
+    model = build_model(cfg, mesh=None)
+    params = init_params(model.defs(), jax.random.PRNGKey(1))
+    ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=80,
+                       schedule="constant")
+    stream = SyntheticStream(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                        global_batch=8, mode="markov"))
+    step = jax.jit(make_train_step(model, ocfg))
+    state = init_train_state(model.defs(), params, ocfg)
+    losses = []
+    for s in range(60):
+        b = stream.global_batch(s)
+        state, m = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    # markov chain with branching 4: optimal loss ~= ln 4 << ln 256 = 5.55
+    assert np.mean(losses[-5:]) < np.mean(losses[:3]) - 0.5

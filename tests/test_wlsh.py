@@ -1,0 +1,150 @@
+"""End-to-end WLSH index behaviour: accuracy guarantees, faithful vs dense
+path agreement, C2LSH degeneration, I/O accounting."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.c2lsh import C2LSH
+from repro.core.datagen import make_dataset, make_query_set, make_weight_set
+from repro.core.distances import weighted_lp_np
+from repro.core.params import PlanConfig
+from repro.core.wlsh import WLSHIndex
+
+
+def _overall_ratio(idx, qs, k, use_dense=False):
+    """Average overall ratio (paper Eq. 16) over a query set."""
+    ratios = []
+    for q in qs.points:
+        for wid in qs.weight_ids:
+            fn = idx.search_dense if use_dense else idx.search
+            res = fn(q, weight_id=int(wid), k=k)
+            got = res.ids[res.ids >= 0]
+            if got.size == 0:
+                ratios.append(np.inf)
+                continue
+            w = idx.weights[int(wid)]
+            exact = np.sort(weighted_lp_np(idx.data, q, w, idx.cfg.p))[: got.size]
+            mine = np.sort(
+                weighted_lp_np(idx.data[got], q, w, idx.cfg.p)
+            )
+            ratios.append(float(np.mean(mine / np.maximum(exact, 1e-12))))
+    return float(np.mean(ratios))
+
+
+@pytest.fixture(scope="module", params=[1.0, 2.0], ids=["l1", "l2"])
+def built(request):
+    p = request.param
+    data = make_dataset(n=3_000, d=24, seed=11)
+    weights = make_weight_set(size=10, d=24, n_subset=2, n_subrange=10, seed=12)
+    cfg = PlanConfig(p=p, c=3, n=len(data), gamma_n=100.0)
+    idx = WLSHIndex(
+        data, weights, cfg, tau=1_000.0 if p == 1.0 else 500.0,
+        v=6, v_prime=6, seed=3,
+    )
+    qs = make_query_set(data, weights, n_query_points=8, n_query_weights=3,
+                        seed=13)
+    return idx, qs
+
+
+def test_accuracy_guarantee(built):
+    """Average overall ratio must be well under the approximation ratio c."""
+    idx, qs = built
+    ratio = _overall_ratio(idx, qs, k=5)
+    assert ratio < idx.cfg.c, f"avg overall ratio {ratio} >= c={idx.cfg.c}"
+
+
+def test_dense_path_matches_guarantee(built):
+    idx, qs = built
+    ratio = _overall_ratio(idx, qs, k=5, use_dense=True)
+    assert ratio < idx.cfg.c
+
+
+def test_faithful_vs_dense_same_stop_semantics(built):
+    """Both paths implement identical stop conditions -> same stop level and
+    the same frequent-candidate *sets* (order may differ)."""
+    idx, qs = built
+    for q in qs.points[:4]:
+        for wid in qs.weight_ids[:2]:
+            r1 = idx.search(q, weight_id=int(wid), k=3)
+            r2 = idx.search_dense(q, weight_id=int(wid), k=3)
+            assert r1.stats.stop_level == r2.stats.stop_level
+            # top-1 distances agree (best candidate is identical)
+            if r1.ids[0] >= 0 and r2.ids[0] >= 0:
+                np.testing.assert_allclose(
+                    r1.dists[0], r2.dists[0], rtol=1e-6
+                )
+
+
+def test_self_query_finds_itself(built):
+    """A query that IS a data point must return it at distance ~0."""
+    idx, _ = built
+    for pid in (0, 100, 999):
+        res = idx.search(idx.data[pid], weight_id=0, k=1)
+        assert res.ids[0] == pid
+        assert res.dists[0] < 1e-6
+
+
+def test_io_accounting(built):
+    idx, qs = built
+    res = idx.search(qs.points[0], weight_id=int(qs.weight_ids[0]), k=5)
+    st = res.stats
+    assert st.io_blocks > 0
+    assert st.n_checked <= 5 + int(np.ceil(idx.cfg.gamma * idx.n)) + 5
+    assert st.n_collisions >= st.n_checked  # identify >= check
+
+
+def test_c2lsh_degeneration():
+    """WLSH with |S| = 1 is exactly C2LSH (shared plumbing, Eqs. 4-5)."""
+    data = make_dataset(n=1_500, d=16, seed=21)
+    w = np.ones(16)
+    cfg = PlanConfig(p=2.0, c=3, n=len(data), gamma_n=100.0)
+    c2 = C2LSH(data, cfg, weight=w, seed=5)
+    wl = WLSHIndex(data, w[None, :], cfg, tau=float("inf"), seed=5)
+    assert len(wl.part.groups) == 1
+    # identical plans: same beta, mu
+    assert c2.part.groups[0].beta_group == wl.part.groups[0].beta_group
+    np.testing.assert_allclose(
+        c2.part.groups[0].mus, wl.part.groups[0].mus
+    )
+    q = data[7].astype(np.float32) + 1.5
+    r1 = c2.query(q, k=3)
+    r2 = wl.search(q, weight_id=0, k=3)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+
+
+def test_collision_threshold_reduction_cuts_io():
+    """Sec 4.2.1: reduced mu identifies candidates earlier -> fewer blocks."""
+    data = make_dataset(n=2_000, d=16, seed=31)
+    weights = make_weight_set(size=6, d=16, n_subset=2, n_subrange=10, seed=32)
+    cfg = PlanConfig(p=2.0, c=3, n=len(data), gamma_n=100.0)
+    io = {}
+    for red in (True, False):
+        idx = WLSHIndex(data, weights, cfg, tau=500.0, v=4, v_prime=4,
+                        use_reduction=red, seed=7)
+        qs = make_query_set(data, weights, n_query_points=6,
+                            n_query_weights=2, seed=33)
+        costs = [
+            idx.search(q, weight_id=int(w), k=3).stats.io_blocks
+            for q in qs.points for w in qs.weight_ids
+        ]
+        io[red] = float(np.mean(costs))
+    assert io[True] <= io[False] * 1.25  # reduction must not blow up I/O
+
+
+def test_non_integer_c_rejected():
+    data = make_dataset(n=100, d=8, seed=0)
+    with pytest.raises(ValueError):
+        WLSHIndex(data, np.ones((1, 8)), PlanConfig(p=2.0, c=2.5, n=100),
+                  tau=1e9)
+
+
+def test_weight_set_generator_properties():
+    W = make_weight_set(size=20, d=12, n_subset=4, n_subrange=5, seed=1)
+    assert W.shape == (20, 12)
+    assert np.all(W >= 1.0) and np.all(W <= 10.0)
+    # subsets of 5 share a subrange per dim: within-subset spread is bounded
+    for s in range(4):
+        sub = W[s * 5 : (s + 1) * 5]
+        assert np.all(sub.max(axis=0) - sub.min(axis=0) <= 9.0 / 5 + 1e-9)
