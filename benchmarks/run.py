@@ -17,7 +17,7 @@ import sys
 import time
 import traceback
 
-from . import (fig1_query, kernel_bench, roofline, table6_space,
+from . import (fig1_query, kernel_bench, roofline, serve_bench, table6_space,
                table7_alsh_space, table8_ratio, table11_relax)
 
 MODULES = {
@@ -27,6 +27,7 @@ MODULES = {
     "fig1_query": fig1_query,
     "table11_relax": table11_relax,
     "kernel_bench": kernel_bench,
+    "serve_bench": serve_bench,
     "roofline": roofline,
 }
 

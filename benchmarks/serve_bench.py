@@ -1,0 +1,145 @@
+"""Multi-group serving throughput: queries/s vs active groups & occupancy.
+
+The paper's experiments measure per-query table-group work; what dominates a
+real deployment is the *serving path* — routing a mixed stream across many
+weight groups, batch coalescing, and compiled-step reuse.  This benchmark
+pins a baseline for that path:
+
+  sweep 1  active groups: the same total query count routed to weights
+           drawn from 1, 2, ... all table groups (more groups = more
+           device dispatches at fixed work per query)
+  sweep 2  batch occupancy: fixed mixed traffic served at submission chunk
+           sizes that leave the compiled q_batch increasingly underfilled
+           (padding waste on ragged tails)
+
+Validation checks assert the structural claims future PRs must not regress:
+compiled steps stay below group count (shape-bucket sharing), and full
+batches beat 1-query submissions on throughput.
+
+    PYTHONPATH=src python -m benchmarks.run --only serve_bench
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.datagen import make_dataset, make_weight_set
+from repro.core.params import PlanConfig
+from repro.core.wlsh import WLSHIndex
+from repro.serving.retrieval import RetrievalService, ServiceConfig
+
+from .common import TAU, Timer, print_table, save
+
+K = 5
+Q_BATCH = 8
+
+
+def _build_service(n, d, n_weights, n_subset, seed=0):
+    data = make_dataset(n=n, d=d, seed=seed)
+    weights = make_weight_set(size=n_weights, d=d, n_subset=n_subset,
+                              n_subrange=10, seed=seed + 1)
+    cfg = PlanConfig(p=2.0, c=3, n=n, gamma_n=100.0)
+    host = WLSHIndex(data, weights, cfg, tau=TAU[2.0], v=d // 4,
+                     v_prime=d // 4, seed=seed + 2)
+    plan = host.export_serving_plan()
+    svc = RetrievalService(
+        plan, data,
+        cfg=ServiceConfig(k=K, q_batch=Q_BATCH, use_pallas=False),
+    )
+    svc.warmup()
+    return data, weights, plan, svc
+
+
+def _traffic(data, weight_ids_pool, n_queries, rng):
+    wids = rng.choice(weight_ids_pool, size=n_queries)
+    qpts = data[rng.choice(len(data), n_queries, replace=False)].astype(
+        np.float32
+    )
+    qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+    return qpts, wids
+
+
+def run(full: bool = False) -> dict:
+    n, d = (16_000, 32) if full else (4_096, 24)
+    n_weights, n_subset = (48, 12) if full else (16, 8)
+    n_queries = 192 if full else 96
+    data, weights, plan, svc = _build_service(n, d, n_weights, n_subset)
+    rng = np.random.default_rng(3)
+
+    # ---- sweep 1: throughput vs number of active groups ---------------------
+    rows_groups = []
+    group_members = [g.member_ids for g in plan.groups]
+    for n_active in range(1, plan.n_groups + 1):
+        pool = np.concatenate(group_members[:n_active])
+        qpts, wids = _traffic(data, pool, n_queries, rng)
+        svc.query(qpts[:Q_BATCH], wids[:Q_BATCH])  # warm dispatch path
+        svc.reset_stats()
+        with Timer() as t:
+            svc.query(qpts, wids)
+        occ = np.mean(
+            [s["occupancy"] for s in svc.stats_summary().values()]
+        )
+        rows_groups.append([
+            n_active, n_queries, n_queries / t.seconds, float(occ),
+            svc.step_cache.n_compiled,
+        ])
+    print_table(
+        "serving throughput vs active groups",
+        ["groups", "queries", "q/s", "occupancy", "compiled steps"],
+        rows_groups,
+    )
+
+    # ---- sweep 2: throughput vs batch occupancy -----------------------------
+    rows_occ = []
+    pool = np.arange(n_weights)
+    qpts, wids = _traffic(data, pool, n_queries, rng)
+    for chunk in (1, 2, 4, Q_BATCH, n_queries):
+        svc.reset_stats()
+        with Timer() as t:
+            for lo in range(0, n_queries, chunk):
+                svc.query(qpts[lo : lo + chunk], wids[lo : lo + chunk])
+        occ = np.mean(
+            [s["occupancy"] for s in svc.stats_summary().values()]
+        )
+        rows_occ.append(
+            [chunk, n_queries, n_queries / t.seconds, float(occ)]
+        )
+    print_table(
+        "serving throughput vs submission chunk (batch occupancy)",
+        ["chunk", "queries", "q/s", "occupancy"],
+        rows_occ,
+    )
+
+    qps_full = rows_occ[-1][2]
+    qps_single = rows_occ[0][2]
+    validation = [
+        {
+            "check": "compiled steps < table groups (shape-bucket sharing)",
+            "ok": bool(svc.step_cache.n_compiled < plan.n_groups),
+        },
+        {
+            "check": "full-batch submission beats 1-query submission",
+            "ok": bool(qps_full > qps_single),
+        },
+        {
+            "check": "mean occupancy > 0.45 when traffic arrives in one batch",
+            "ok": bool(rows_occ[-1][3] > 0.45),
+        },
+    ]
+    for v in validation:
+        print(("PASS " if v["ok"] else "FAIL ") + v["check"])
+
+    payload = {
+        "n": n, "d": d, "n_weights": n_weights,
+        "n_groups": plan.n_groups,
+        "n_compiled_steps": svc.step_cache.n_compiled,
+        "groups_sweep": rows_groups,
+        "occupancy_sweep": rows_occ,
+        "validation": validation,
+    }
+    save("serve_bench", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -19,15 +19,19 @@ from .families import LpFamilyParams, hash_codes, hash_codes_np, sample_lp_famil
 from .params import PlanConfig, beta_mu, threshold_reduction_factor
 from .partition import PartitionResult, pairwise_beta, partition, tau_min
 from .pstable import pstable_pdf, pstable_pdf_abs, sample_pstable
+from .serving_plan import GroupServingPlan, MemberParams, ServingPlan
 from .wlsh import WLSHIndex
 
 __all__ = [
     "ALSHIndex",
     "C2LSH",
     "E2LSH",
+    "GroupServingPlan",
     "LpFamilyParams",
+    "MemberParams",
     "PartitionResult",
     "PlanConfig",
+    "ServingPlan",
     "WLSHIndex",
     "alsh_tables",
     "beta_mu",

@@ -30,6 +30,7 @@ from .distances import weighted_lp_np
 from .families import LpFamilyParams, hash_codes_np, sample_lp_family
 from .params import PlanConfig
 from .partition import GroupPlan, PartitionResult, partition
+from .serving_plan import GroupServingPlan, ServingPlan
 
 __all__ = ["WLSHIndex", "SearchResult", "SearchStats", "BLOCK_BYTES"]
 
@@ -140,6 +141,58 @@ class WLSHIndex:
         self._built[gi] = built
         return built
 
+    # ----------------------------------------------------------------- export
+
+    def _effective_mus(self, plan: GroupPlan) -> np.ndarray:
+        """Per-member integer collision thresholds (reduction applied)."""
+        mus = plan.mus_reduced if self.use_reduction else plan.mus
+        return np.maximum(1, np.ceil(mus - 1e-9)).astype(np.int32)
+
+    def export_serving_plan(self, include_codes: bool = True) -> ServingPlan:
+        """Flat, serializable description of every table group.
+
+        This is the only core -> device handoff: the sharded engine and the
+        retrieval service consume the plan, never `WLSHIndex` internals.
+        ``include_codes`` ships the host-computed bucket codes so a device
+        engine reproduces the host oracle's candidate sets exactly.
+        """
+        groups = []
+        for gi in range(len(self.part.groups)):
+            built = self._group(gi)
+            plan = built.plan
+            groups.append(
+                GroupServingPlan(
+                    group_id=gi,
+                    center_id=int(plan.center_id),
+                    beta_group=int(plan.beta_group),
+                    width=float(built.fam.width),
+                    levels_cap=int(built.fam.levels_cap),
+                    member_ids=plan.member_ids.astype(np.int64),
+                    beta_members=plan.betas.astype(np.int32),
+                    mu_members=self._effective_mus(plan),
+                    r_min_members=plan.r_min_members.astype(np.float64),
+                    n_levels_members=plan.n_levels.astype(np.int32),
+                    proj=built.fam.proj,
+                    b_int=built.fam.b_int,
+                    b_frac=built.fam.b_frac,
+                    center_weight=built.fam.center_weight,
+                    p=float(self.cfg.p),
+                    codes=built.codes if include_codes else None,
+                )
+            )
+        return ServingPlan(
+            n=self.n,
+            d=self.data.shape[1],
+            p=float(self.cfg.p),
+            c=int(round(self.cfg.c)),
+            gamma_n=float(self.cfg.gamma_n),
+            tau=float(self.part.tau),
+            weights=self.weights.copy(),
+            group_of=self.part.group_of.copy(),
+            member_slot=self.part.member_slot.copy(),
+            groups=tuple(groups),
+        )
+
     # ----------------------------------------------------------------- search
 
     def _member_params(self, weight_id: int):
@@ -148,8 +201,7 @@ class WLSHIndex:
         slot = int(self.part.member_slot[weight_id])
         plan = built.plan
         beta_i = int(plan.betas[slot])
-        mu = plan.mus_reduced[slot] if self.use_reduction else plan.mus[slot]
-        mu_i = max(1, int(math.ceil(mu - 1e-9)))
+        mu_i = int(self._effective_mus(plan)[slot])
         return built, slot, beta_i, mu_i
 
     def search(

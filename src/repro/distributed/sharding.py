@@ -24,7 +24,32 @@ from typing import Iterable
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["spec", "shard", "named_sharding", "with_rules", "axis_size"]
+__all__ = [
+    "spec",
+    "shard",
+    "shard_map_nocheck",
+    "named_sharding",
+    "with_rules",
+    "axis_size",
+]
+
+
+def shard_map_nocheck(f, mesh: Mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions.
+
+    jax >= 0.5 exports shard_map at top level (flag named check_vma);
+    0.4.x ships it under jax.experimental with check_rep.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map  # jax 0.4.x
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 _DEFAULT_RULES: dict[str | None, tuple[str, ...]] = {
     "batch": ("pod", "data"),

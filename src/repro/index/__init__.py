@@ -1,15 +1,31 @@
-"""Distributed WLSH index runtime: sharded build + query engine."""
+"""Distributed WLSH index runtime: sharded build + group-aware query engine."""
 
-from .builder import build_state, fold_center_weight, make_build_step
-from .config import IndexConfig
-from .engine import QueryState, make_query_step, query_input_specs
+from .builder import (
+    build_group_state,
+    build_state,
+    fold_center_weight,
+    make_build_step,
+)
+from .config import IndexConfig, pad_beta, pad_levels
+from .engine import (
+    QueryState,
+    QueryStepCache,
+    encode_queries,
+    make_query_step,
+    query_input_specs,
+)
 
 __all__ = [
     "IndexConfig",
     "QueryState",
+    "QueryStepCache",
+    "build_group_state",
     "build_state",
+    "encode_queries",
     "fold_center_weight",
     "make_build_step",
     "make_query_step",
+    "pad_beta",
+    "pad_levels",
     "query_input_specs",
 ]

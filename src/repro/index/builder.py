@@ -20,11 +20,19 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.families import LpFamilyParams
+from ..core.serving_plan import GroupServingPlan
 from ..kernels import ops
 from .config import IndexConfig
 from .engine import QueryState, _point_axes
 
-__all__ = ["fold_center_weight", "make_build_step", "build_state", "build_input_specs"]
+__all__ = [
+    "fold_center_weight",
+    "make_build_step",
+    "build_state",
+    "build_group_state",
+    "pad_cols",
+    "build_input_specs",
+]
 
 
 def fold_center_weight(fam: LpFamilyParams) -> dict[str, np.ndarray]:
@@ -97,6 +105,70 @@ def build_state(
         proj=jax.device_put(jnp.asarray(folded["proj"]), rep2),
         b_int=jax.device_put(jnp.asarray(folded["b_int"]), rep1),
         b_frac=jax.device_put(jnp.asarray(folded["b_frac"]), rep1),
+        width=jax.device_put(jnp.asarray(1.0, jnp.float32),
+                             NamedSharding(mesh, P())),
+    )
+
+
+def pad_cols(x: np.ndarray, beta: int) -> np.ndarray:
+    """Pad the trailing (table) axis to ``beta`` columns with zeros.
+
+    Padded tables are dead weight only: every query masks lanes >= its
+    beta_q in freq_level, and beta_q never exceeds the group's real beta.
+    """
+    have = x.shape[-1]
+    if have == beta:
+        return x
+    if have > beta:
+        raise ValueError(f"group beta {have} exceeds padded config beta {beta}")
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, beta - have)]
+    return np.pad(x, pad)
+
+
+def build_group_state(
+    mesh: Mesh,
+    cfg: IndexConfig,
+    points: np.ndarray,
+    gplan: GroupServingPlan,
+) -> QueryState:
+    """Materialize one table group's QueryState from its serving plan.
+
+    ``cfg.beta`` may exceed the group's real table count (bucketed shape
+    padding, config.pad_beta); family params are zero-padded to match.  When
+    the plan ships host-computed codes they are placed directly (bit-exact
+    candidate sets vs the host oracle); otherwise the codes are built on
+    device through the sharded encode.
+    """
+    folded = gplan.folded()
+    proj = pad_cols(folded["proj"], cfg.beta)
+    b_int = pad_cols(folded["b_int"], cfg.beta)
+    b_frac = pad_cols(folded["b_frac"], cfg.beta)
+    pa = _point_axes(mesh)
+    rows = NamedSharding(mesh, P(pa, None))
+    rep2 = NamedSharding(mesh, P(None, None))
+    rep1 = NamedSharding(mesh, P(None))
+
+    if gplan.codes is not None:
+        codes = jax.device_put(
+            jnp.asarray(pad_cols(gplan.codes, cfg.beta), jnp.int32), rows
+        )
+        vecs = jax.device_put(
+            jnp.asarray(points).astype(jnp.dtype(cfg.vec_dtype)), rows
+        )
+    else:
+        step = make_build_step(mesh, cfg)
+        codes, vecs = step(
+            jnp.asarray(points, jnp.float32),
+            jnp.asarray(proj),
+            jnp.asarray(b_int),
+            jnp.asarray(b_frac),
+        )
+    return QueryState(
+        codes=codes,
+        points=vecs,
+        proj=jax.device_put(jnp.asarray(proj), rep2),
+        b_int=jax.device_put(jnp.asarray(b_int), rep1),
+        b_frac=jax.device_put(jnp.asarray(b_frac), rep1),
         width=jax.device_put(jnp.asarray(1.0, jnp.float32),
                              NamedSharding(mesh, P())),
     )

@@ -1,8 +1,43 @@
-"""Configuration for the distributed WLSH index engine."""
+"""Configuration for the distributed WLSH index engine.
+
+An ``IndexConfig`` fixes every compile-relevant shape of one table group's
+query step.  Two groups whose configs compare equal lower to the *same*
+compiled step — ``shape_signature()`` is the jit-cache key the group-aware
+engine uses (see ``engine.QueryStepCache``).  ``pad_beta`` / ``pad_levels``
+quantize per-group sizes onto a small set of buckets so a many-group plan
+compiles only a handful of distinct steps; per-query ``beta_q`` and
+``levels_q`` inputs mask the padding at run time, keeping results exact.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import math
+from typing import Sequence
+
+__all__ = ["IndexConfig", "pad_beta", "pad_levels"]
+
+# Default table-count buckets: multiples of 32 (the relaxed Eq. 11 betas
+# land in the tens-to-hundreds, Table 6) capped by powers of two above 512.
+_BETA_STEP = 32
+_LEVEL_STEP = 4
+
+
+def pad_beta(beta: int, buckets: Sequence[int] | None = None) -> int:
+    """Smallest admissible table count >= beta (bounds compile count)."""
+    if buckets is not None:
+        for b in sorted(buckets):
+            if b >= beta:
+                return int(b)
+        raise ValueError(f"beta={beta} exceeds the largest bucket {max(buckets)}")
+    if beta <= 512:
+        return _BETA_STEP * math.ceil(beta / _BETA_STEP)
+    return 1 << math.ceil(math.log2(beta))
+
+
+def pad_levels(n_levels: int, step: int = _LEVEL_STEP) -> int:
+    """Round the compiled level-loop bound up to a multiple of ``step``."""
+    return step * math.ceil(max(n_levels, 1) / step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,14 +60,40 @@ class IndexConfig:
     # block scoring working set is ~(q_batch x block_n x beta) x 4 bytes
     # (the XLA-fallback eq-count materializes it) — 1 GB at the production
     # config, next to the 2 GB/chip code shard
-    budget: int = 4096 + 10  # k + gamma*n (gamma=100/n paper default -> ~k+100;
-    # kept configurable because at 1B points a larger false-positive budget
-    # is the practical choice)
+    gamma_n: float = 100.0  # gamma * n (paper default gamma = 100/n), so the
+    # candidate budget k + ceil(gamma * n) stays aligned with the host
+    # planner's PlanConfig regardless of n
+    budget_override: int | None = None  # explicit budget; None = derive.
+    # At 1B points a larger false-positive budget than the paper's ~k+100
+    # is the practical choice — set it here instead of re-deriving gamma.
     vec_dtype: str = "bfloat16"  # stored vectors (verification re-ranks in f32)
     use_pallas: bool | None = None  # None = auto (TPU only)
     analysis_unroll: bool = False  # unroll block/level loops so the dry-run
     # cost analysis counts true work (XLA counts loop bodies once); used by
     # launch/dryrun.py shallow analysis lowerings only
+
+    @property
+    def gamma(self) -> float:
+        return self.gamma_n / self.n
+
+    @property
+    def budget(self) -> int:
+        """Candidate budget k + ceil(gamma * n) (paper stop condition 2)."""
+        if self.budget_override is not None:
+            return self.budget_override
+        return self.k + int(math.ceil(self.gamma * self.n))
+
+    def shape_signature(self) -> tuple:
+        """Everything that determines the compiled query step.
+
+        Frozen + eq dataclass: the config itself is hashable, but the
+        explicit tuple documents (and tests pin) what sharing depends on.
+        """
+        return (
+            self.n, self.d, self.beta, self.q_batch, self.k, self.c,
+            self.n_levels, self.p, self.block_n, self.budget,
+            self.vec_dtype, self.use_pallas, self.analysis_unroll,
+        )
 
     @property
     def width_placeholder(self) -> float:

@@ -26,10 +26,15 @@ matrix -- at beta/d ~ 4 this costs ~1.3x compute for ~0 bytes of HBM
 footprint; the single-pass per-level-candidate variant is evaluated in the
 perf log (EXPERIMENTS.md Sec. Perf).
 
-Every query carries its own weight vector, collision threshold mu and
-radius base r_min (the WLSH multi-weight semantics -- queries under
-*different* weighted distance functions batch together as long as they hit
-the same table group).
+Every query carries its own weight vector, collision threshold mu, radius
+base r_min, table count beta_q and level cap levels_q (the WLSH multi-weight
+semantics -- queries under *different* weighted distance functions batch
+together as long as they hit the same table group).  Query bucket codes are
+an *input*: the retrieval service encodes on the host (float64, bit-exact
+against the planner's codes) while standalone callers use
+``encode_queries``.  Per-query beta_q/levels_q also make shape padding
+exact, so groups whose (beta, n_levels) round to the same buckets share one
+compiled step via ``QueryStepCache``.
 """
 
 from __future__ import annotations
@@ -42,10 +47,18 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..distributed.sharding import shard_map_nocheck
 from ..kernels import ops
 from .config import IndexConfig
 
-__all__ = ["QueryState", "make_query_step", "query_input_specs", "shardings"]
+__all__ = [
+    "QueryState",
+    "QueryStepCache",
+    "encode_queries",
+    "make_query_step",
+    "query_input_specs",
+    "shardings",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,12 +126,15 @@ def _per_query_lp(q, w, pts, p: float):
 def _query_shard(
     state: QueryState,
     queries,  # (q_loc, d)
+    codes_q,  # (q_loc, beta) int32 precomputed query bucket codes
     q_weight,  # (q_loc, d)
     mu,  # (q_loc,) int32
     r_min,  # (q_loc,) f32
     beta_q,  # (q_loc,) int32 per-member beta_{W_i}
+    levels_q,  # (q_loc,) int32 per-member level cap (<= cfg.n_levels)
     cfg: IndexConfig,
     mesh_axes: tuple[str, ...],
+    axis_sizes: tuple[int, ...],
 ):
     c, L, k = cfg.c, cfg.n_levels, cfg.k
     n_loc = state.codes.shape[0]
@@ -127,20 +143,6 @@ def _query_shard(
     q_loc = queries.shape[0]
     qf32 = queries.astype(jnp.float32)
     wf32 = q_weight.astype(jnp.float32)
-
-    # state.proj is the *folded* projection (center weight and bucket width
-    # folded in at build time, builder.fold_center_weight), so both data and
-    # queries hash with unit weight/width.  q_weight is the per-query
-    # *distance* weight (the WLSH multi-weight semantics).
-    codes_q = ops.hash_encode(
-        qf32,
-        jnp.ones((cfg.d,), jnp.float32),
-        state.proj,
-        state.b_int,
-        state.b_frac,
-        1.0,
-        use_pallas=False,
-    )
 
     codes_blocks = state.codes.reshape(n_blocks, block, cfg.beta)
     point_blocks = state.points.reshape(n_blocks, block, cfg.d)
@@ -181,9 +183,16 @@ def _query_shard(
     hist_g = jax.lax.psum(hist_g, mesh_axes)
     nf_cum = jnp.cumsum(hist_f[:, : L + 1], axis=1)
     ng_cum = jnp.cumsum(hist_g[:, : L + 1], axis=1)
-    cond = (ng_cum >= k) | (nf_cum >= cfg.budget)
+    # Stop conditions evaluated only up to each query's own level cap: the
+    # compiled bound L may be padded above the member's n_levels (bucketed
+    # shape sharing), and a query that exhausts its levels stops *at* them
+    # exactly like the host loop.
+    levels = jnp.arange(L + 1, dtype=jnp.int32)
+    cond = ((ng_cum >= k) | (nf_cum >= cfg.budget)) & (
+        levels[None, :] <= levels_q[:, None]
+    )
     stop = jnp.where(
-        jnp.any(cond, axis=1), jnp.argmax(cond, axis=1), jnp.int32(L)
+        jnp.any(cond, axis=1), jnp.argmax(cond, axis=1), levels_q
     ).astype(jnp.int32)  # (q_loc,)
 
     # ---- pass 2: masked distances -> running local top-k ------------------
@@ -208,9 +217,9 @@ def _query_shard(
 
     shard_off = jnp.int32(0)
     mul = 1
-    for ax in reversed(mesh_axes):
+    for ax, size in reversed(tuple(zip(mesh_axes, axis_sizes))):
         shard_off = shard_off + jax.lax.axis_index(ax) * mul
-        mul *= jax.lax.axis_size(ax)
+        mul *= size
     shard_off = shard_off * n_loc
     boffs = shard_off + jnp.arange(n_blocks, dtype=jnp.int32) * block
     init = (
@@ -222,6 +231,25 @@ def _query_shard(
         unroll=n_blocks if cfg.analysis_unroll else 1,
     )
 
+    # ---- exact re-rank of the k local winners ------------------------------
+    # The p=2 scan scores with the norms+matmul expansion (MXU); its f32
+    # cancellation error is ~|x||ulp| — swamping genuinely small distances.
+    # Recompute the survivors' distances from the coordinate differences
+    # ((q_loc, k, d) work, exact in f32) and re-sort.
+    local_rows = jnp.clip(idx - shard_off, 0, n_loc - 1)
+    cand = state.points[local_rows].astype(jnp.float32)  # (q_loc, k, d)
+    diff = jnp.abs((qf32[:, None, :] - cand) * wf32[:, None, :])
+    if abs(cfg.p - 2.0) < 1e-9:
+        exact = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    elif abs(cfg.p - 1.0) < 1e-9:
+        exact = jnp.sum(diff, axis=-1)
+    else:
+        exact = jnp.sum(diff**cfg.p, axis=-1) ** (1.0 / cfg.p)
+    vals = jnp.where(jnp.isfinite(vals), exact, vals)
+    rvals, rpos = jax.lax.top_k(-vals, k)
+    vals = -rvals
+    idx = jnp.take_along_axis(idx, rpos, axis=1)
+
     # ---- global top-k merge ------------------------------------------------
     gv = jax.lax.all_gather(vals, mesh_axes, tiled=False)  # (S, q_loc, k)
     gi = jax.lax.all_gather(idx, mesh_axes, tiled=False)
@@ -230,18 +258,44 @@ def _query_shard(
     gi = jnp.moveaxis(gi, 0, 1).reshape(q_loc, S * k)
     fvals, fpos = jax.lax.top_k(-gv, k)
     fidx = jnp.take_along_axis(gi, fpos, axis=1)
-    n_checked = jnp.take_along_axis(nf_cum, stop[:, None], axis=1)[:, 0]
+    n_checked = jnp.minimum(
+        jnp.take_along_axis(nf_cum, stop[:, None], axis=1)[:, 0],
+        jnp.int32(cfg.budget),
+    )
     return -fvals, fidx, stop, n_checked
 
 
+def encode_queries(state: QueryState, queries) -> jax.Array:
+    """(Q, beta) int32 query bucket codes via the device (f32) path.
+
+    state.proj is the *folded* projection (center weight and bucket width
+    folded in at build time), so queries hash with unit weight/width.  The
+    retrieval service instead host-encodes in float64 for bit-exactness
+    against the planner; this is the standalone/engine-only path.
+    """
+    return ops.hash_encode(
+        jnp.asarray(queries, jnp.float32),
+        jnp.ones((state.proj.shape[0],), jnp.float32),
+        state.proj,
+        state.b_int,
+        state.b_frac,
+        1.0,
+        use_pallas=False,
+    )
+
+
 def make_query_step(mesh: Mesh, cfg: IndexConfig):
-    """jit'd sharded query step: (state, queries, q_weight, mu, r_min) ->
+    """jit'd sharded query step:
+    (state, queries, q_codes, q_weight, mu, r_min, beta_q, levels_q) ->
     (dists (Q,k), ids (Q,k), stop (Q,), n_checked (Q,))."""
     pa = _point_axes(mesh)
     sh = shardings(mesh)
 
-    fn = functools.partial(_query_shard, cfg=cfg, mesh_axes=pa)
-    smapped = jax.shard_map(
+    fn = functools.partial(
+        _query_shard, cfg=cfg, mesh_axes=pa,
+        axis_sizes=tuple(mesh.shape[a] for a in pa),
+    )
+    smapped = shard_map_nocheck(
         fn,
         mesh=mesh,
         in_specs=(
@@ -255,12 +309,13 @@ def make_query_step(mesh: Mesh, cfg: IndexConfig):
             ),
             P(None, None),
             P(None, None),
+            P(None, None),
+            P(None),
             P(None),
             P(None),
             P(None),
         ),
         out_specs=(P(None, None), P(None, None), P(None), P(None)),
-        check_vma=False,
     )
     return jax.jit(
         smapped,
@@ -268,12 +323,41 @@ def make_query_step(mesh: Mesh, cfg: IndexConfig):
             sh["state"],
             sh["queries"],
             sh["queries"],
+            sh["queries"],
+            sh["q_meta"],
             sh["q_meta"],
             sh["q_meta"],
             sh["q_meta"],
         ),
         out_shardings=(sh["out"], sh["out"], sh["q_meta"], sh["q_meta"]),
     )
+
+
+class QueryStepCache:
+    """Compiled-step reuse across table groups.
+
+    Keyed by (mesh, cfg): IndexConfig is a frozen eq dataclass, so two
+    groups whose shapes quantize to the same buckets (config.pad_beta /
+    pad_levels) produce equal configs and share one lowered+compiled step.
+    ``n_compiled`` counts actual make_query_step calls — the serving tests
+    pin it to the number of distinct shape signatures.
+    """
+
+    def __init__(self):
+        self._steps: dict = {}
+        self.n_compiled = 0
+
+    def get(self, mesh: Mesh, cfg: IndexConfig):
+        key = (mesh, cfg)
+        step = self._steps.get(key)
+        if step is None:
+            step = make_query_step(mesh, cfg)
+            self._steps[key] = step
+            self.n_compiled += 1
+        return step
+
+    def __len__(self) -> int:
+        return len(self._steps)
 
 
 def query_input_specs(cfg: IndexConfig):
@@ -290,8 +374,10 @@ def query_input_specs(cfg: IndexConfig):
     return dict(
         state=state,
         queries=jax.ShapeDtypeStruct((cfg.q_batch, cfg.d), jnp.float32),
+        q_codes=jax.ShapeDtypeStruct((cfg.q_batch, cfg.beta), jnp.int32),
         q_weight=jax.ShapeDtypeStruct((cfg.q_batch, cfg.d), jnp.float32),
         mu=jax.ShapeDtypeStruct((cfg.q_batch,), jnp.int32),
         r_min=jax.ShapeDtypeStruct((cfg.q_batch,), jnp.float32),
         beta_q=jax.ShapeDtypeStruct((cfg.q_batch,), jnp.int32),
+        levels_q=jax.ShapeDtypeStruct((cfg.q_batch,), jnp.int32),
     )

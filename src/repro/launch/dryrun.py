@@ -230,8 +230,9 @@ def _lower_wlsh(cfg, shape, mesh, mesh_name, overrides: dict | None = None):
         step = make_query_step(mesh, icfg)
         specs = query_input_specs(icfg)
         lowered = step.lower(
-            specs["state"], specs["queries"], specs["q_weight"],
-            specs["mu"], specs["r_min"], specs["beta_q"],
+            specs["state"], specs["queries"], specs["q_codes"],
+            specs["q_weight"], specs["mu"], specs["r_min"],
+            specs["beta_q"], specs["levels_q"],
         )
     compiled = lowered.compile()
     return lowered, compiled, chips, {"index_cfg": dataclasses.asdict(icfg)}

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
-from ..distributed.sharding import shard
+from ..distributed.sharding import shard, shard_map_nocheck
 from .layers import mlp, mlp_defs
 from .params import pdef
 
@@ -210,7 +210,7 @@ def _moe_block_ep(params, x, cfg: ModelConfig, mesh):
     tok_spec = P(dp, None, None) if B % dp_size == 0 else P(None, None, None)
 
     body = functools.partial(_ep_body, cfg=cfg, e_loc=e_loc, mp=mp)
-    fn = jax.shard_map(
+    fn = shard_map_nocheck(
         body,
         mesh=mesh,
         in_specs=(
@@ -221,7 +221,6 @@ def _moe_block_ep(params, x, cfg: ModelConfig, mesh):
             P(mp, None, None),  # wd
         ),
         out_specs=tok_spec,
-        check_vma=False,
     )
     y = fn(x, params["router"], params["wg"], params["wu"], params["wd"])
     return shard(y, mesh, "batch", "seq", None)

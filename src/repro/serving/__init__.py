@@ -1,5 +1,19 @@
-"""Serving substrate: decode loop + samplers (KV caches live in models/)."""
+"""Serving substrate: multi-group retrieval service + decode loop/samplers."""
 
 from .decode import SamplerConfig, generate, make_serve_step
+from .retrieval import (
+    GroupServeStats,
+    RetrievalResult,
+    RetrievalService,
+    ServiceConfig,
+)
 
-__all__ = ["SamplerConfig", "generate", "make_serve_step"]
+__all__ = [
+    "GroupServeStats",
+    "RetrievalResult",
+    "RetrievalService",
+    "SamplerConfig",
+    "ServiceConfig",
+    "generate",
+    "make_serve_step",
+]

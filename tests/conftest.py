@@ -10,15 +10,20 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-settings.register_profile(
-    "ci",
-    max_examples=25,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("ci")
+from _hyp import HAVE_HYPOTHESIS, HealthCheck, settings
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile(
+        "ci",
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[
+            HealthCheck.too_slow,
+            HealthCheck.data_too_large,
+        ],
+    )
+    settings.load_profile("ci")
 
 
 @pytest.fixture(scope="session")

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.derived import angular_bounds, derived_sensitivity, ratio_bounds
 from repro.core.distances import (

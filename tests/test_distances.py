@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core.distances import (
     radius_bounds,

@@ -16,7 +16,14 @@ import jax.numpy as jnp
 from repro.core.datagen import make_dataset, make_weight_set
 from repro.core.params import PlanConfig
 from repro.core.wlsh import WLSHIndex
-from repro.index import IndexConfig, build_state, make_query_step
+from repro.index import (
+    IndexConfig,
+    build_state,
+    encode_queries,
+    make_query_step,
+    pad_beta,
+    pad_levels,
+)
 
 
 @pytest.fixture(scope="module")
@@ -43,7 +50,7 @@ def _engine_for_group(host: WLSHIndex, mesh, gi: int, data, k: int):
         n_levels=n_levels,
         p=host.cfg.p,
         block_n=256,
-        budget=k + int(np.ceil(host.cfg.gamma * len(data))),
+        gamma_n=host.cfg.gamma_n,
         vec_dtype="float32",
         use_pallas=False,
     )
@@ -66,20 +73,23 @@ def test_engine_matches_host_oracle(setup):
     qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
 
     q_weight = np.stack([host.weights[w] for w in wids]).astype(np.float32)
-    mus, r_mins, betas = [], [], []
+    mus, r_mins, betas, levels = [], [], [], []
     for w in wids:
         _, slot, beta_i, mu_i = host._member_params(w)
         mus.append(mu_i)
         r_mins.append(built.plan.r_min_members[slot])
         betas.append(beta_i)
+        levels.append(int(built.plan.n_levels[slot]))
 
     dists, ids, stop, n_checked = step(
         state,
         jnp.asarray(qpts),
+        encode_queries(state, qpts),
         jnp.asarray(q_weight),
         jnp.asarray(mus, jnp.int32),
         jnp.asarray(r_mins, jnp.float32),
         jnp.asarray(betas, jnp.int32),
+        jnp.asarray(levels, jnp.int32),
     )
     dists, ids, stop = np.asarray(dists), np.asarray(ids), np.asarray(stop)
 
@@ -106,16 +116,56 @@ def test_engine_self_query(setup):
     wid = int(built.plan.member_ids[0])
     _, slot, beta_i, mu_i = host._member_params(wid)
     pids = [0, 17, 1023, 512]
+    qpts = jnp.asarray(data[pids], jnp.float32)
     dists, ids, *_ = step(
         state,
-        jnp.asarray(data[pids], jnp.float32),
+        qpts,
+        encode_queries(state, qpts),
         jnp.asarray(np.stack([host.weights[wid]] * 4), jnp.float32),
         jnp.asarray([mu_i] * 4, jnp.int32),
         jnp.asarray([built.plan.r_min_members[slot]] * 4, jnp.float32),
         jnp.asarray([beta_i] * 4, jnp.int32),
+        jnp.asarray([int(built.plan.n_levels[slot])] * 4, jnp.int32),
     )
     np.testing.assert_array_equal(np.asarray(ids)[:, 0], pids)
     assert np.all(np.asarray(dists)[:, 0] < 1e-3)
+
+
+def test_budget_derived_from_gamma():
+    # paper default: budget = k + ceil(gamma * n) with gamma = gamma_n / n
+    cfg = IndexConfig(n=2_000, k=7, gamma_n=100.0)
+    assert cfg.gamma == 100.0 / 2_000
+    assert cfg.budget == 7 + 100
+    cfg = IndexConfig(n=1 << 30, k=10, gamma_n=100.0)
+    assert cfg.budget == 110
+    # explicit override wins (the practical choice at 1B points)
+    cfg = IndexConfig(n=1 << 30, k=10, budget_override=4096)
+    assert cfg.budget == 4096
+    # engine and host planner agree by construction
+    from repro.core.params import PlanConfig
+
+    pcfg = PlanConfig(n=4_000, gamma_n=100.0)
+    icfg = IndexConfig(n=4_000, k=5, gamma_n=pcfg.gamma_n)
+    assert icfg.budget == 5 + int(np.ceil(pcfg.gamma * pcfg.n))
+
+
+def test_shape_padding_buckets():
+    assert pad_beta(1) == 32
+    assert pad_beta(135) == 160
+    assert pad_beta(160) == 160
+    assert pad_beta(161) == 192
+    assert pad_beta(513) == 1024
+    assert pad_beta(150, buckets=(128, 256)) == 256
+    with pytest.raises(ValueError):
+        pad_beta(300, buckets=(128, 256))
+    assert pad_levels(13) == 16
+    assert pad_levels(16) == 16
+    assert pad_levels(5, step=8) == 8
+    # configs built from shapes that quantize to the same buckets are equal
+    # (and therefore share one compiled step through QueryStepCache)
+    a = IndexConfig(n=1_024, beta=pad_beta(135), n_levels=pad_levels(13))
+    b = IndexConfig(n=1_024, beta=pad_beta(137), n_levels=pad_levels(14))
+    assert a == b and a.shape_signature() == b.shape_signature()
 
 
 def test_build_is_deterministic(setup):

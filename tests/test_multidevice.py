@@ -36,7 +36,8 @@ def test_sharded_engine_matches_host_oracle_on_8_devices():
         from repro.core.datagen import make_dataset, make_weight_set
         from repro.core.params import PlanConfig
         from repro.core.wlsh import WLSHIndex
-        from repro.index import IndexConfig, build_state, make_query_step
+        from repro.index import IndexConfig, build_state, encode_queries, \
+            make_query_step
 
         assert jax.device_count() == 8
         data = make_dataset(n=1024, d=16, seed=41)
@@ -51,7 +52,7 @@ def test_sharded_engine_matches_host_oracle_on_8_devices():
         icfg = IndexConfig(
             n=len(data), d=16, beta=built.fam.beta, q_batch=4, k=3,
             c=3, n_levels=int(np.max(built.plan.n_levels)), p=2.0,
-            block_n=128, budget=3 + int(np.ceil(cfg.gamma * len(data))),
+            block_n=128, gamma_n=cfg.gamma_n,
             vec_dtype="float32", use_pallas=False,
         )
         state = build_state(mesh, icfg, data, built.fam)
@@ -59,13 +60,16 @@ def test_sharded_engine_matches_host_oracle_on_8_devices():
         wid = int(built.plan.member_ids[0])
         _, slot, beta_i, mu_i = host._member_params(wid)
         pids = [3, 400, 777, 1000]
+        qpts = jnp.asarray(data[pids], jnp.float32)
         dists, ids, stop, _ = step(
             state,
-            jnp.asarray(data[pids], jnp.float32),
+            qpts,
+            encode_queries(state, qpts),
             jnp.asarray(np.stack([host.weights[wid]] * 4), jnp.float32),
             jnp.asarray([mu_i] * 4, jnp.int32),
             jnp.asarray([built.plan.r_min_members[slot]] * 4, jnp.float32),
             jnp.asarray([beta_i] * 4, jnp.int32),
+            jnp.asarray([int(built.plan.n_levels[slot])] * 4, jnp.int32),
         )
         ids = np.asarray(ids)
         assert list(ids[:, 0]) == pids, ids[:, 0]
@@ -74,6 +78,46 @@ def test_sharded_engine_matches_host_oracle_on_8_devices():
         for qi, pid in enumerate(pids):
             want = host.search_dense(data[pid], weight_id=wid, k=3)
             assert int(np.asarray(stop)[qi]) == want.stats.stop_level
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_retrieval_service_on_8_devices_matches_host_oracle():
+    """Multi-group serving on a real (4,2) mesh: routed, coalesced queries
+    match search_dense per query, with compiled-step sharing intact."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.core.datagen import make_dataset, make_weight_set
+        from repro.core.params import PlanConfig
+        from repro.core.wlsh import WLSHIndex
+        from repro.serving import RetrievalService, ServiceConfig
+
+        assert jax.device_count() == 8
+        data = make_dataset(n=1024, d=16, seed=41)
+        weights = make_weight_set(size=8, d=16, n_subset=4, n_subrange=10,
+                                  seed=42)
+        cfg = PlanConfig(p=2.0, c=3, n=len(data), gamma_n=100.0)
+        host = WLSHIndex(data, weights, cfg, tau=500.0, v=4, v_prime=4,
+                         seed=9)
+        plan = host.export_serving_plan()
+        assert plan.n_groups >= 3
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        svc = RetrievalService(plan, data, mesh=mesh,
+                               cfg=ServiceConfig(k=3, q_batch=4))
+        rng = np.random.default_rng(43)
+        wids = rng.integers(0, len(weights), 10)
+        qpts = data[rng.choice(len(data), 10, replace=False)].astype(
+            np.float32)
+        qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+        res = svc.query(qpts, wids)
+        assert len(np.unique(res.group_ids)) >= 3
+        for qi in range(10):
+            want = host.search_dense(qpts[qi], weight_id=int(wids[qi]), k=3)
+            np.testing.assert_array_equal(res.ids[qi],
+                                          want.ids.astype(np.int32))
+            assert int(res.stop_levels[qi]) == want.stats.stop_level
+        assert svc.step_cache.n_compiled < plan.n_groups
         print("OK")
     """)
     assert "OK" in out

@@ -1,0 +1,193 @@
+"""Multi-group retrieval service vs the host oracle.
+
+The service must route every query to its weight's table group, answer a
+mixed batch spanning >= 3 groups *identically* to `WLSHIndex.search_dense`
+(the plan ships host codes and the service host-encodes queries in f64, so
+candidate sets match bit-exactly; distances compare in f32), coalesce and
+pad batches without changing per-query answers, and compile at most one
+query step per distinct padded shape signature.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.datagen import make_dataset, make_weight_set
+from repro.core.params import PlanConfig
+from repro.core.serving_plan import ServingPlan
+from repro.core.wlsh import WLSHIndex
+from repro.serving import RetrievalService, ServiceConfig
+
+K = 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = make_dataset(n=1_024, d=16, seed=41)
+    # 4 subsets of 2 users -> the partition yields 4 groups with distinct
+    # per-member beta/mu (betas 135/135/137/161 at these seeds)
+    weights = make_weight_set(size=8, d=16, n_subset=4, n_subrange=10,
+                              seed=42)
+    cfg = PlanConfig(p=2.0, c=3, n=len(data), gamma_n=100.0)
+    host = WLSHIndex(data, weights, cfg, tau=500.0, v=4, v_prime=4, seed=9)
+    plan = host.export_serving_plan()
+    assert plan.n_groups >= 3, "fixture must span >= 3 table groups"
+    svc = RetrievalService(plan, data, cfg=ServiceConfig(k=K, q_batch=4))
+    return data, weights, host, plan, svc
+
+
+def _mixed_queries(data, weights, n_queries, seed=43):
+    rng = np.random.default_rng(seed)
+    wids = rng.integers(0, len(weights), n_queries)
+    qpts = data[rng.choice(len(data), n_queries, replace=False)].astype(
+        np.float32
+    )
+    qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+    return qpts, wids
+
+
+def test_routing_follows_partition(setup):
+    data, weights, host, plan, svc = setup
+    qpts, wids = _mixed_queries(data, weights, 16)
+    res = svc.query(qpts, wids)
+    np.testing.assert_array_equal(
+        res.group_ids, host.part.group_of[wids].astype(np.int32)
+    )
+    # distinct member parameters across the served groups
+    betas = {int(g.beta_group) for g in plan.groups}
+    mus = {tuple(g.mu_members.tolist()) for g in plan.groups}
+    assert len(betas) >= 2 and len(mus) >= 3
+
+
+def test_mixed_batch_matches_search_dense(setup):
+    data, weights, host, plan, svc = setup
+    qpts, wids = _mixed_queries(data, weights, 24)
+    res = svc.query(qpts, wids)
+    assert len(np.unique(res.group_ids)) >= 3
+    for qi in range(len(qpts)):
+        want = host.search_dense(qpts[qi], weight_id=int(wids[qi]), k=K)
+        np.testing.assert_array_equal(
+            res.ids[qi], want.ids.astype(np.int32),
+            err_msg=f"ids mismatch at query {qi} (weight {wids[qi]})",
+        )
+        assert int(res.stop_levels[qi]) == want.stats.stop_level
+        assert int(res.n_checked[qi]) == want.stats.n_checked
+        m = res.ids[qi] >= 0
+        np.testing.assert_allclose(
+            res.dists[qi][m], want.dists[m], rtol=1e-4, atol=1e-2
+        )
+
+
+def test_one_compiled_step_per_shape_signature(setup):
+    data, weights, host, plan, svc = setup
+    svc.warmup()  # every group built + compiled
+    signatures = {
+        svc.group_config(gi).shape_signature()
+        for gi in range(plan.n_groups)
+    }
+    assert svc.step_cache.n_compiled == len(signatures)
+    # bucketed padding makes sharing actually happen on this plan
+    assert svc.step_cache.n_compiled < plan.n_groups
+    # repeated traffic compiles nothing new
+    qpts, wids = _mixed_queries(data, weights, 8, seed=5)
+    before = svc.step_cache.n_compiled
+    svc.query(qpts, wids)
+    assert svc.step_cache.n_compiled == before
+
+
+def test_coalesced_batch_equals_one_at_a_time(setup):
+    data, weights, host, plan, svc = setup
+    # all queries under weights of one group -> coalesced into shared batches
+    gi = int(np.argmax([g.n_members for g in plan.groups]))
+    members = plan.groups[gi].member_ids
+    rng = np.random.default_rng(7)
+    wids = members[rng.integers(0, len(members), 6)]
+    qpts = data[rng.choice(len(data), 6, replace=False)].astype(np.float32)
+    qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+
+    batched = svc.query(qpts, wids)
+    assert np.all(batched.group_ids == gi)
+    for qi in range(len(qpts)):
+        single = svc.query(qpts[qi : qi + 1], wids[qi : qi + 1])
+        np.testing.assert_array_equal(single.ids[0], batched.ids[qi])
+        np.testing.assert_array_equal(single.dists[0], batched.dists[qi])
+        assert single.stop_levels[0] == batched.stop_levels[qi]
+        assert single.n_checked[0] == batched.n_checked[qi]
+
+
+def test_ragged_batches_match_aligned(setup):
+    data, weights, host, plan, svc = setup
+    # 13 mixed queries with q_batch=4 -> every group serves a padded tail
+    qpts, wids = _mixed_queries(data, weights, 13, seed=11)
+    ragged = svc.query(qpts, wids)
+    # same queries submitted one by one (maximal padding, 1/4 occupancy)
+    for qi in range(len(qpts)):
+        single = svc.query(qpts[qi : qi + 1], wids[qi : qi + 1])
+        np.testing.assert_array_equal(single.ids[0], ragged.ids[qi])
+        np.testing.assert_array_equal(single.dists[0], ragged.dists[qi])
+
+
+def test_serving_stats_accounting(setup):
+    data, weights, host, plan, svc = setup
+    svc.reset_stats()
+    qpts, wids = _mixed_queries(data, weights, 13, seed=11)
+    res = svc.query(qpts, wids)
+    summary = svc.stats_summary()
+    assert sum(s["n_queries"] for s in summary.values()) == 13
+    for gi, s in summary.items():
+        served = int(np.sum(res.group_ids == gi))
+        assert s["n_queries"] == served
+        assert 0.0 < s["occupancy"] <= 1.0
+        assert s["n_batches"] == -(-served // svc.cfg.q_batch)
+
+
+def test_plan_npz_roundtrip(tmp_path, setup):
+    data, weights, host, plan, svc = setup
+    path = str(tmp_path / "plan.npz")
+    plan.save_npz(path)
+    plan2 = ServingPlan.load_npz(path)
+    assert plan2.n_groups == plan.n_groups
+    assert (plan2.n, plan2.d, plan2.c, plan2.p) == (
+        plan.n, plan.d, plan.c, plan.p
+    )
+    np.testing.assert_array_equal(plan2.group_of, plan.group_of)
+    np.testing.assert_array_equal(plan2.weights, plan.weights)
+    for a, b in zip(plan.groups, plan2.groups):
+        np.testing.assert_array_equal(a.proj, b.proj)
+        np.testing.assert_array_equal(a.codes, b.codes)
+        np.testing.assert_array_equal(a.mu_members, b.mu_members)
+        np.testing.assert_array_equal(a.r_min_members, b.r_min_members)
+        assert a.width == b.width and a.levels_cap == b.levels_cap
+    # a service over the reloaded plan answers identically
+    svc2 = RetrievalService(plan2, data, cfg=ServiceConfig(k=K, q_batch=4))
+    qpts, wids = _mixed_queries(data, weights, 6, seed=3)
+    r1, r2 = svc.query(qpts, wids), svc2.query(qpts, wids)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_array_equal(r1.dists, r2.dists)
+
+
+def test_plan_without_codes_serves_via_device_encoding(setup):
+    """include_codes=False: data codes are built on device (f32), so query
+    codes must come from the same encoding — the service falls back from
+    host_encode automatically and self-queries still find themselves."""
+    data, weights, host, plan, svc = setup
+    plan2 = host.export_serving_plan(include_codes=False)
+    assert all(g.codes is None for g in plan2.groups)
+    svc2 = RetrievalService(plan2, data, cfg=ServiceConfig(k=K, q_batch=4))
+    rng = np.random.default_rng(13)
+    wids = rng.integers(0, len(weights), 4)
+    res = svc2.query(data[:4].astype(np.float32), wids)
+    np.testing.assert_array_equal(res.ids[:, 0], np.arange(4))
+    assert np.all(res.dists[:, 0] < 1e-3)
+
+
+def test_weight_id_validation(setup):
+    data, weights, host, plan, svc = setup
+    q = data[:1].astype(np.float32)
+    with pytest.raises(ValueError):
+        svc.query(q, [len(weights)])
+    with pytest.raises(ValueError):
+        svc.query(q, [-1])
+    with pytest.raises(ValueError):
+        svc.query(data[:2].astype(np.float32), [0])

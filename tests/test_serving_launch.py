@@ -52,6 +52,25 @@ def test_serve_launcher_runs():
     assert out["tokens"].shape == (2, 4)
 
 
+def test_retrieval_launcher_runs(tmp_path):
+    """plan -> build -> serve -> report, with the search_dense cross-check
+    and ServingPlan persistence."""
+    from repro.core.serving_plan import ServingPlan
+    from repro.launch.retrieval import main
+
+    plan_path = str(tmp_path / "plan.npz")
+    out = main([
+        "--n", "512", "--d", "16", "--n-weights", "4", "--n-subset", "2",
+        "--n-queries", "8", "--k", "3", "--v", "4", "--q-batch", "4",
+        "--check", "--plan-out", plan_path,
+    ])
+    assert out["n_check_failures"] == 0
+    assert out["n_groups"] >= 1
+    assert out["n_compiled_steps"] <= out["n_groups"]
+    assert sum(s["n_queries"] for s in out["stats"].values()) == 8
+    assert ServingPlan.load_npz(plan_path).n_groups == out["n_groups"]
+
+
 def test_train_launcher_restart_resume(tmp_path):
     """Injected failure at step 6 -> supervisor restarts from checkpoint,
     run completes, loss history continuous."""
