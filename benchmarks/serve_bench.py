@@ -1,4 +1,5 @@
-"""Multi-group serving throughput: queries/s vs active groups & occupancy.
+"""Multi-group serving throughput: queries/s vs active groups & occupancy,
+plus the deadline-batching occupancy lift under open-loop traffic.
 
 The paper's experiments measure per-query table-group work; what dominates a
 real deployment is the *serving path* — routing a mixed stream across many
@@ -11,10 +12,17 @@ pins a baseline for that path:
   sweep 2  batch occupancy: fixed mixed traffic served at submission chunk
            sizes that leave the compiled q_batch increasingly underfilled
            (padding waste on ragged tails)
+  sweep 3  deadline batching: the same open-loop Poisson arrival trace
+           (each request submitted alone, the worst case of sweep 2)
+           served by the async deadline-aware frontend over arrival rate x
+           max_delay_ms, vs the sync single-submission baseline — batch
+           occupancy bought with bounded queue wait
 
 Validation checks assert the structural claims future PRs must not regress:
-compiled steps stay below group count (shape-bucket sharing), and full
-batches beat 1-query submissions on throughput.
+compiled steps stay below group count (shape-bucket sharing), full batches
+beat 1-query submissions on throughput, the async frontend answers the
+trace bit-exactly, and deadline batching lifts mean occupancy over
+single-submission on every swept configuration.
 
     PYTHONPATH=src python -m benchmarks.run --only serve_bench
 """
@@ -26,6 +34,11 @@ import numpy as np
 from repro.core.datagen import make_dataset, make_weight_set
 from repro.core.params import PlanConfig
 from repro.core.wlsh import WLSHIndex
+from repro.serving.async_service import (
+    AsyncRetrievalService,
+    ManualClock,
+    replay_open_loop,
+)
 from repro.serving.retrieval import RetrievalService, ServiceConfig
 
 from .common import TAU, Timer, print_table, save
@@ -76,9 +89,7 @@ def run(full: bool = False) -> dict:
         svc.reset_stats()
         with Timer() as t:
             svc.query(qpts, wids)
-        occ = np.mean(
-            [s["occupancy"] for s in svc.stats_summary().values()]
-        )
+        occ = svc.mean_occupancy()
         rows_groups.append([
             n_active, n_queries, n_queries / t.seconds, float(occ),
             svc.step_cache.n_compiled,
@@ -98,9 +109,7 @@ def run(full: bool = False) -> dict:
         with Timer() as t:
             for lo in range(0, n_queries, chunk):
                 svc.query(qpts[lo : lo + chunk], wids[lo : lo + chunk])
-        occ = np.mean(
-            [s["occupancy"] for s in svc.stats_summary().values()]
-        )
+        occ = svc.mean_occupancy()
         rows_occ.append(
             [chunk, n_queries, n_queries / t.seconds, float(occ)]
         )
@@ -110,8 +119,54 @@ def run(full: bool = False) -> dict:
         rows_occ,
     )
 
+    # ---- sweep 3: deadline batching vs sync single-submission ---------------
+    # one fixed open-loop trace per arrival rate; the sync baseline submits
+    # each request alone as it arrives (occupancy 1/q_batch by construction)
+    qpts, wids = _traffic(data, pool, n_queries, rng)
+    sync_res = svc.query(qpts, wids)
+    svc.reset_stats()
+    with Timer() as t:
+        for qi in range(n_queries):
+            svc.query(qpts[qi : qi + 1], wids[qi : qi + 1])
+    occ_sync = svc.mean_occupancy()
+    qps_sync_single = n_queries / t.seconds
+    rows_async = []
+    async_exact = True
+    for rate in (500.0, 2_000.0, 8_000.0):
+        trng = np.random.default_rng(int(rate))
+        arrivals = np.cumsum(trng.exponential(1.0 / rate, n_queries))
+        for delay_ms in (0.5, 2.0, 10.0):
+            asvc = AsyncRetrievalService(svc, max_delay_ms=delay_ms,
+                                         clock=ManualClock())
+            svc.reset_stats()
+            with Timer() as t:
+                res, waits = replay_open_loop(asvc, qpts, wids, arrivals)
+            async_exact &= bool(
+                np.array_equal(res.ids, sync_res.ids)
+                and np.array_equal(res.stop_levels, sync_res.stop_levels)
+                and np.array_equal(res.n_checked, sync_res.n_checked)
+            )
+            occ = svc.mean_occupancy()
+            rows_async.append([
+                rate, delay_ms, occ, occ_sync,
+                float(1e3 * waits.mean()),
+                float(1e3 * np.percentile(waits, 95)),
+                asvc.n_launched_full, asvc.n_launched_deadline,
+                n_queries / t.seconds,
+            ])
+    print_table(
+        "async deadline batching vs single-submission "
+        f"(sync baseline occupancy {occ_sync:.3f} at {qps_sync_single:.1f} "
+        "q/s)",
+        ["rate q/s", "deadline ms", "occupancy", "occ sync", "wait ms",
+         "p95 wait ms", "full", "deadline", "q/s"],
+        rows_async,
+    )
+
     qps_full = rows_occ[-1][2]
     qps_single = rows_occ[0][2]
+    occ_async_min = min(r[2] for r in rows_async)
+    occ_async_max = max(r[2] for r in rows_async)
     validation = [
         {
             "check": "compiled steps < table groups (shape-bucket sharing)",
@@ -125,6 +180,20 @@ def run(full: bool = False) -> dict:
             "check": "mean occupancy > 0.45 when traffic arrives in one batch",
             "ok": bool(rows_occ[-1][3] > 0.45),
         },
+        {
+            "check": "async frontend bit-exact with sync on the same trace",
+            "ok": async_exact,
+        },
+        {
+            "check": "deadline batching lifts occupancy over "
+                     "single-submission on every (rate, deadline)",
+            "ok": bool(occ_async_min > occ_sync),
+        },
+        {
+            "check": "occupancy at the largest rate x deadline >= 2x "
+                     "single-submission",
+            "ok": bool(occ_async_max >= 2 * occ_sync),
+        },
     ]
     for v in validation:
         print(("PASS " if v["ok"] else "FAIL ") + v["check"])
@@ -135,6 +204,14 @@ def run(full: bool = False) -> dict:
         "n_compiled_steps": svc.step_cache.n_compiled,
         "groups_sweep": rows_groups,
         "occupancy_sweep": rows_occ,
+        "async_sweep": rows_async,
+        "async_sweep_columns": [
+            "arrival_rate_qps", "max_delay_ms", "occupancy",
+            "occupancy_sync_single", "mean_wait_ms", "p95_wait_ms",
+            "n_launched_full", "n_launched_deadline", "qps_compute",
+        ],
+        "occupancy_sync_single": occ_sync,
+        "qps_sync_single": qps_sync_single,
         "validation": validation,
     }
     save("serve_bench", payload)

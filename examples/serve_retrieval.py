@@ -12,6 +12,12 @@ the users' weight vectors into table groups and exports a ServingPlan, and
 same-group traffic into batches, and shares compiled query steps across
 groups with equal padded shapes (single-device mesh here; the same code
 lowers to the production meshes in launch/dryrun.py).
+
+The same traffic is then replayed open-loop — one request at a time, at
+Poisson arrival times — through the deadline-aware async frontend
+(``AsyncRetrievalService``, launch on batch fill or ``max_delay_ms``
+expiry), which must answer bit-exactly while recovering most of the batch
+occupancy that single-request submission throws away.
 """
 
 import time
@@ -26,7 +32,13 @@ from repro.core.distances import weighted_lp_np
 from repro.core.params import PlanConfig
 from repro.core.wlsh import WLSHIndex
 from repro.models import build_model, init_params
-from repro.serving import RetrievalService, ServiceConfig
+from repro.serving import (
+    AsyncRetrievalService,
+    ManualClock,
+    RetrievalService,
+    ServiceConfig,
+    replay_open_loop,
+)
 
 
 def embed_corpus(n_docs: int, seq_len: int = 32, arch: str = "olmo-1b"):
@@ -97,6 +109,27 @@ def main():
         print(f"  group {gi}: {s['n_queries']} queries / {s['n_batches']} "
               f"batches, occupancy {s['occupancy']:.2f}, "
               f"mean stop level {s['mean_stop_level']:.1f}")
+
+    # the same requests, one at a time at Poisson arrivals, through the
+    # deadline-aware async frontend (shared states / stats / step cache)
+    rate_qps, max_delay_ms = 2_000.0, 2.0
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, n_queries))
+    svc.reset_stats()
+    asvc = AsyncRetrievalService(svc, max_delay_ms=max_delay_ms,
+                                 clock=ManualClock())
+    ares, waits = replay_open_loop(asvc, queries, wids, arrivals)
+    assert (
+        np.array_equal(ares.ids, res.ids)
+        and np.array_equal(ares.stop_levels, res.stop_levels)
+        and np.array_equal(ares.n_checked, res.n_checked)
+    ), "async frontend must answer bit-exactly like the sync service"
+    occ = svc.mean_occupancy()
+    print(f"async replay at {rate_qps:.0f} q/s, deadline {max_delay_ms} ms: "
+          f"bit-exact with sync; {asvc.n_launched_full} full / "
+          f"{asvc.n_launched_deadline} deadline launches, occupancy "
+          f"{occ:.2f} (single-submission baseline "
+          f"{1 / svc.cfg.q_batch:.2f}), wait mean "
+          f"{1e3 * waits.mean():.2f} ms")
 
     ok = 0
     for qi, (wid, did) in enumerate(zip(wids, doc_ids)):

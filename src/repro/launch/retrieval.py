@@ -11,11 +11,20 @@ Steps:
               (Algorithm 1) and exports a serializable ServingPlan
   2. build  — RetrievalService materializes per-group device state; groups
               whose padded shapes coincide share one compiled query step
-  3. serve  — a mixed (query, weight_id) stream is routed, coalesced,
-              padded and answered in submission order (Algorithm 2)
+  3. serve  — sync (default): the mixed (query, weight_id) stream arrives
+              in one call and is routed, coalesced, padded and answered in
+              submission order (Algorithm 2).
+              ``--async``: the same stream is replayed open-loop — each
+              request submitted alone at a Poisson arrival time
+              (``--arrival-rate`` q/s of virtual traffic) into the
+              deadline-aware AsyncRetrievalService, which launches a batch
+              when it fills or when the oldest request has waited
+              ``--max-delay-ms``.  Both frontends are bit-exact on
+              identical traffic.
   4. report — per-group occupancy / stop-level / n_checked stats, compile
-              sharing, throughput; ``--check`` cross-validates every answer
-              against the host oracle WLSHIndex.search_dense
+              sharing, throughput (plus queue-wait percentiles and launch
+              causes in async mode); ``--check`` cross-validates every
+              answer against the host oracle WLSHIndex.search_dense
 
 ``--plan-out`` persists the ServingPlan npz so a separate serving job can
 start without re-planning.
@@ -31,6 +40,11 @@ import numpy as np
 from ..core.datagen import make_dataset, make_weight_set
 from ..core.params import PlanConfig
 from ..core.wlsh import WLSHIndex
+from ..serving.async_service import (
+    AsyncRetrievalService,
+    ManualClock,
+    replay_open_loop,
+)
 from ..serving.retrieval import RetrievalService, ServiceConfig
 
 __all__ = ["run", "main"]
@@ -64,6 +78,7 @@ def run(args) -> dict:
     svc = RetrievalService(
         plan, data,
         cfg=ServiceConfig(k=args.k, q_batch=args.q_batch,
+                          max_delay_ms=args.max_delay_ms,
                           use_pallas=False if args.no_pallas else None),
     )
     svc.warmup()
@@ -79,12 +94,39 @@ def run(args) -> dict:
         np.float32
     )
     qpts = qpts + rng.normal(0, args.q_noise, qpts.shape).astype(np.float32)
-    t0 = time.time()
-    res = svc.query(qpts, wids)
-    t_serve = time.time() - t0
-    print(f"serve: {args.n_queries} queries over "
-          f"{len(np.unique(res.group_ids))} active groups in {t_serve:.2f}s "
-          f"({args.n_queries / t_serve:.1f} q/s)")
+    async_report = None
+    if args.use_async:
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / args.arrival_rate, args.n_queries)
+        )
+        asvc = AsyncRetrievalService(svc, clock=ManualClock())
+        t0 = time.time()
+        res, waits = replay_open_loop(asvc, qpts, wids, arrivals)
+        t_serve = time.time() - t0
+        wait_ms = 1e3 * waits if len(waits) else np.array([np.nan])
+        async_report = {
+            "arrival_rate": args.arrival_rate,
+            "max_delay_ms": args.max_delay_ms,
+            "mean_wait_ms": float(wait_ms.mean()),
+            "p95_wait_ms": float(np.percentile(wait_ms, 95)),
+            "n_launched_full": asvc.n_launched_full,
+            "n_launched_deadline": asvc.n_launched_deadline,
+        }
+        print(f"serve[async]: {args.n_queries} queries at "
+              f"{args.arrival_rate:.0f} q/s open-loop, deadline "
+              f"{args.max_delay_ms} ms -> {len(np.unique(res.group_ids))} "
+              f"active groups, {asvc.n_launched_full} full / "
+              f"{asvc.n_launched_deadline} deadline launches, wait "
+              f"mean {wait_ms.mean():.2f} ms / p95 "
+              f"{np.percentile(wait_ms, 95):.2f} ms "
+              f"({args.n_queries / t_serve:.1f} q/s compute)")
+    else:
+        t0 = time.time()
+        res = svc.query(qpts, wids)
+        t_serve = time.time() - t0
+        print(f"serve: {args.n_queries} queries over "
+              f"{len(np.unique(res.group_ids))} active groups in "
+              f"{t_serve:.2f}s ({args.n_queries / t_serve:.1f} q/s)")
 
     # ---- report -------------------------------------------------------------
     print("per-group serving stats:")
@@ -116,6 +158,7 @@ def run(args) -> dict:
         "qps": args.n_queries / t_serve,
         "stats": svc.stats_summary(),
         "n_check_failures": n_bad,
+        "async": async_report,
     }
 
 
@@ -141,6 +184,17 @@ def parse_args(argv=None):
                     help="save the exported ServingPlan npz here")
     ap.add_argument("--check", action="store_true",
                     help="cross-validate every answer against search_dense")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the deadline-aware async frontend: "
+                         "requests are replayed open-loop at --arrival-rate "
+                         "and a batch launches when it fills or its oldest "
+                         "request has waited --max-delay-ms")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="async deadline budget: a partial batch launches "
+                         "once its oldest request has waited this long")
+    ap.add_argument("--arrival-rate", type=float, default=2_000.0,
+                    help="open-loop Poisson arrival rate (queries/s of "
+                         "virtual traffic) for --async replay")
     ap.add_argument("--no-pallas", action="store_true")
     return ap.parse_args(argv)
 

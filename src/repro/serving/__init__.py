@@ -1,5 +1,14 @@
-"""Serving substrate: multi-group retrieval service + decode loop/samplers."""
+"""Serving substrate: sync + async multi-group retrieval frontends over a
+shared batching core, plus the decode loop/samplers."""
 
+from .async_service import (
+    AsyncRetrievalService,
+    ManualClock,
+    QueryAnswer,
+    QueryFuture,
+    replay_open_loop,
+)
+from .batching import Batcher, BatchPlan, coalesce, pad_take, run_plans
 from .decode import SamplerConfig, generate, make_serve_step
 from .retrieval import (
     GroupServeStats,
@@ -9,11 +18,21 @@ from .retrieval import (
 )
 
 __all__ = [
+    "AsyncRetrievalService",
+    "BatchPlan",
+    "Batcher",
     "GroupServeStats",
+    "ManualClock",
+    "QueryAnswer",
+    "QueryFuture",
     "RetrievalResult",
     "RetrievalService",
     "SamplerConfig",
     "ServiceConfig",
+    "coalesce",
     "generate",
     "make_serve_step",
+    "pad_take",
+    "replay_open_loop",
+    "run_plans",
 ]

@@ -1,0 +1,322 @@
+"""Deadline-aware asynchronous frontend over the shared batching core.
+
+The synchronous ``RetrievalService`` only fills a compiled batch when a
+full ``q_batch`` of same-group traffic arrives in one call — under
+open-loop streaming traffic (each request submitted alone as it arrives)
+every launch pads ``q_batch - 1`` dead rows and occupancy collapses to
+``1/q_batch`` (serve_bench sweep 2).  This module trades a bounded wait
+for occupancy:
+
+  submit    each (query, weight_id[, deadline]) enters its group's
+            pending buffer and gets a ``QueryFuture``
+  fill      a buffer reaching q_batch launches immediately
+  deadline  ``poll()`` launches any group whose oldest pending request
+            has expired (default budget ``ServiceConfig.max_delay_ms``)
+  drain     flushes everything regardless of deadline (shutdown / end of
+            trace)
+
+Launches go through ``Batcher.run_batch`` — the same padding, encoding
+and compiled-step path as the sync frontend — so the two are bit-exact
+on identical traffic, and ``QueryStepCache`` compiles nothing new when
+an async frontend is layered over a warmed sync service.  Futures
+resolve in submission order within each launch.
+
+The clock is injectable: real deployments use ``time.monotonic`` (the
+default), while tests and open-loop trace replay (``replay_open_loop``)
+drive a deterministic ``ManualClock`` so deadline behaviour is exact and
+repeatable.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+from .batching import Batcher
+from .retrieval import RetrievalResult, RetrievalService
+
+__all__ = [
+    "AsyncRetrievalService",
+    "ManualClock",
+    "QueryAnswer",
+    "QueryFuture",
+    "replay_open_loop",
+]
+
+
+class ManualClock:
+    """Deterministic monotonic clock for tests and trace replay."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock must not run backwards (dt={dt})")
+        self.t += dt
+        return self.t
+
+    def advance_to(self, t: float) -> float:
+        if t < self.t:
+            raise ValueError(f"clock must not run backwards ({t} < {self.t})")
+        self.t = float(t)
+        return self.t
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryAnswer:
+    """One query's answer (the async counterpart of a RetrievalResult row)."""
+
+    ids: np.ndarray  # (k,) int32, -1 = missing
+    dists: np.ndarray  # (k,) f32, +inf = missing
+    group_id: int
+    stop_level: int
+    n_checked: int
+
+
+class QueryFuture:
+    """Handle for one submitted query, resolved when its batch launches."""
+
+    __slots__ = ("_answer", "_done", "t_resolved")
+
+    def __init__(self):
+        self._answer = None
+        self._done = False
+        self.t_resolved: float | None = None  # clock time of the launch
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> QueryAnswer:
+        if not self._done:
+            raise RuntimeError(
+                "query still pending — its batch has not launched yet "
+                "(advance the clock past the deadline and poll(), or drain())"
+            )
+        return self._answer
+
+    def _resolve(self, answer: QueryAnswer, now: float) -> None:
+        self._answer = answer
+        self._done = True
+        self.t_resolved = now
+
+
+@dataclasses.dataclass(eq=False)  # identity semantics: requests may repeat
+class _Pending:
+    query: np.ndarray
+    weight_id: int
+    deadline: float
+    t_submit: float
+    future: QueryFuture
+
+
+class AsyncRetrievalService:
+    """Deadline-aware streaming frontend: fill-or-deadline batch launches.
+
+    Wraps an existing ``RetrievalService`` (or its ``Batcher``) so group
+    states, serving stats and the compiled-step cache are shared across
+    frontends.  ``max_delay_ms`` overrides ``ServiceConfig.max_delay_ms``
+    as the default per-request deadline budget; an explicit ``deadline``
+    (absolute clock time) on ``submit`` overrides both.
+
+    Single-threaded by design: launches happen inside ``submit`` (batch
+    full), ``poll`` (deadline expired) and ``drain``.  A real-time caller
+    polls on its event loop at ``next_deadline()``; trace replay drives a
+    ``ManualClock`` through the same code path.
+    """
+
+    def __init__(
+        self,
+        service: RetrievalService | Batcher,
+        max_delay_ms: float | None = None,
+        clock=time.monotonic,
+    ):
+        self.batcher = (
+            service.batcher if isinstance(service, RetrievalService)
+            else service
+        )
+        if max_delay_ms is None:
+            max_delay_ms = self.batcher.cfg.max_delay_ms
+        if not (max_delay_ms >= 0):  # also rejects NaN
+            raise ValueError(f"max_delay_ms must be >= 0, got {max_delay_ms}")
+        self.max_delay_ms = float(max_delay_ms)
+        self.clock = clock
+        self._pending: dict[int, collections.deque[_Pending]] = (
+            collections.defaultdict(collections.deque)
+        )
+        # launch-cause counters (visible to tests and serve_bench)
+        self.n_launched_full = 0
+        self.n_launched_deadline = 0
+        self.n_launched_drain = 0
+
+    # ------------------------------------------------------------- inspection
+
+    @property
+    def pending_count(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    def next_deadline(self) -> float | None:
+        """Earliest pending deadline across groups (None = nothing pending)."""
+        deadlines = [
+            min(r.deadline for r in q)
+            for q in self._pending.values() if q
+        ]
+        return min(deadlines) if deadlines else None
+
+    # ---------------------------------------------------------------- serving
+
+    def submit(self, query, weight_id, deadline: float | None = None
+               ) -> QueryFuture:
+        """Enqueue one request; launches its group's batch if now full."""
+        now = self.clock()
+        query = np.asarray(query, np.float32).reshape(-1)
+        if query.shape != (self.batcher.plan.d,):
+            raise ValueError(
+                f"query must be a single ({self.batcher.plan.d},) vector, "
+                f"got shape {query.shape}"
+            )
+        gi = int(self.batcher.route(weight_id)[0])
+        if deadline is None:
+            deadline = now + self.max_delay_ms / 1e3
+        elif not np.isfinite(deadline):
+            # a NaN/inf deadline would never compare expired in poll() and
+            # would poison next_deadline() for every event-loop driver
+            raise ValueError(f"deadline must be finite, got {deadline}")
+        fut = QueryFuture()
+        pend = _Pending(query, int(weight_id), float(deadline), now, fut)
+        q = self._pending[gi]
+        q.append(pend)
+        if len(q) >= self.batcher.cfg.q_batch:
+            try:
+                self._launch(gi, "full")
+            except Exception:
+                # submit is atomic too: the caller never receives ``fut`` on
+                # a raise, so withdraw their request (it is the newest, put
+                # back last by the launch rollback) — a retry re-submits it,
+                # while earlier requests stay queued with live futures
+                if q and q[-1] is pend:
+                    q.pop()
+                raise
+        return fut
+
+    def poll(self, now: float | None = None) -> int:
+        """Launch every group whose oldest pending deadline has expired.
+
+        Returns the number of batches launched.
+        """
+        if now is None:
+            now = self.clock()
+        n = 0
+        for gi in list(self._pending):
+            q = self._pending[gi]
+            if q and min(r.deadline for r in q) <= now:
+                self._launch(gi, "deadline")
+                n += 1
+        return n
+
+    def drain(self) -> int:
+        """Flush all pending buffers regardless of deadline."""
+        n = 0
+        for gi in list(self._pending):
+            while self._pending[gi]:
+                self._launch(gi, "drain")
+                n += 1
+        return n
+
+    def _launch(self, gi: int, cause: str) -> None:
+        q = self._pending[gi]
+        qb = self.batcher.cfg.q_batch
+        batch = [q.popleft() for _ in range(min(qb, len(q)))]
+        try:
+            ids, dists, stop, chk = self.batcher.run_batch(
+                gi,
+                np.stack([r.query for r in batch]),
+                np.array([r.weight_id for r in batch], np.int64),
+            )
+        except Exception:
+            # atomic launch: put the batch back (original order, ahead of
+            # anything newer) so a caller that retries after a device error
+            # has lost nothing and no future is stranded unresolvable
+            q.extendleft(reversed(batch))
+            raise
+        if cause == "full":
+            self.n_launched_full += 1
+        elif cause == "deadline":
+            self.n_launched_deadline += 1
+        else:
+            self.n_launched_drain += 1
+        now = self.clock()
+        for i, r in enumerate(batch):  # submission order within the launch
+            r.future._resolve(QueryAnswer(
+                ids=ids[i], dists=dists[i], group_id=gi,
+                stop_level=int(stop[i]), n_checked=int(chk[i]),
+            ), now)
+
+
+def replay_open_loop(svc: AsyncRetrievalService, queries, weight_ids,
+                     arrivals):
+    """Open-loop trace replay on a ManualClock (virtual time).
+
+    ``arrivals`` are absolute non-decreasing virtual times, one per query;
+    each request is submitted alone at its arrival (the open-loop regime
+    serve_bench sweep 2 penalizes), with the clock jumping to every
+    deadline that expires between arrivals.  Device compute is off-clock:
+    waits measure pure batching delay, which is what the deadline knob
+    trades against occupancy.
+
+    Returns ``(RetrievalResult, waits)`` in submission order, where
+    ``waits[i]`` is the virtual seconds request ``i`` spent queued before
+    its batch launched.
+    """
+    if not isinstance(svc.clock, ManualClock):
+        raise TypeError("replay_open_loop requires a ManualClock service")
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
+    arrivals = np.atleast_1d(np.asarray(arrivals, np.float64))
+    nq = len(queries)
+    if not (len(weight_ids) == len(arrivals) == nq):
+        raise ValueError("queries / weight_ids / arrivals length mismatch")
+    if np.any(np.diff(arrivals) < 0):
+        raise ValueError("arrivals must be non-decreasing")
+    k = svc.batcher.cfg.k
+    if nq == 0:  # degenerate trace: agree with the sync frontend
+        return RetrievalResult(
+            ids=np.empty((0, k), np.int32),
+            dists=np.empty((0, k), np.float32),
+            group_ids=np.empty(0, np.int32),
+            stop_levels=np.empty(0, np.int32),
+            n_checked=np.empty(0, np.int32),
+        ), np.empty(0)
+
+    futs: list[QueryFuture] = []
+    for i in range(nq):
+        while True:  # fire deadlines that expire before this arrival
+            nd = svc.next_deadline()
+            if nd is None or nd > arrivals[i]:
+                break
+            svc.clock.advance_to(nd)
+            svc.poll()
+        svc.clock.advance_to(arrivals[i])
+        futs.append(svc.submit(queries[i], weight_ids[i]))
+    while svc.pending_count:  # run out the tail
+        nd = svc.next_deadline()
+        svc.clock.advance_to(nd)
+        svc.poll()
+
+    answers = [f.result() for f in futs]
+    t_resolved = np.array([f.t_resolved for f in futs])
+    res = RetrievalResult(
+        ids=np.stack([a.ids for a in answers]).astype(np.int32),
+        dists=np.stack([a.dists for a in answers]).astype(np.float32),
+        group_ids=np.array([a.group_id for a in answers], np.int32),
+        stop_levels=np.array([a.stop_level for a in answers], np.int32),
+        n_checked=np.array([a.n_checked for a in answers], np.int32),
+    )
+    assert res.ids.shape == (nq, k)
+    return res, t_resolved - arrivals

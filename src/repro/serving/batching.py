@@ -1,0 +1,368 @@
+"""Shared batching core for the retrieval frontends.
+
+The paper's query procedure (Algorithm 2) answers each query inside its
+weight's table group; everything a serving frontend does around that —
+route, coalesce, pad, execute, merge — is frontend-independent.  This
+module is that shared core, consumed by both the synchronous
+``RetrievalService`` (all queries present up front) and the asynchronous
+``AsyncRetrievalService`` (queries trickle in and batches launch on fill
+or deadline):
+
+  route     (query, weight_id) -> plan.group_of[weight_id]     Batcher.route
+  coalesce  same-group submission indices -> q_batch chunks    coalesce()
+  pad       ragged tails cycle the batch's real rows           pad_take()
+  execute   one compiled step per *shape signature* (groups    Batcher.run_batch
+            quantized onto beta/level buckets share a step
+            through QueryStepCache)
+  merge     real rows scattered back to submission order       run_plans()
+
+``coalesce``/``pad_take``/``run_plans`` are pure (numpy in, numpy out) so
+the batching invariants — no dropped, duplicated or reordered query, and
+no padded row ever reaching a result — are property-tested against a fake
+executor without touching a device.  ``Batcher`` owns the stateful side:
+lazily built per-group device states, the compiled-step cache, host/device
+query encoding, and per-group serving stats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.serving_plan import ServingPlan
+from ..index.builder import build_group_state, pad_cols
+from ..index.config import IndexConfig, pad_beta, pad_levels
+from ..index.engine import QueryStepCache, encode_queries
+
+__all__ = [
+    "BatchPlan",
+    "Batcher",
+    "GroupServeStats",
+    "ServiceConfig",
+    "coalesce",
+    "pad_take",
+    "run_plans",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Serving-side knobs (plan parameters come from the ServingPlan)."""
+
+    k: int = 10
+    q_batch: int = 8  # compiled batch shape; ragged tails are padded
+    block_n: int | None = None  # points per scan block; None = whole shard
+    vec_dtype: str = "float32"
+    use_pallas: bool | None = None  # None = auto (TPU only)
+    beta_buckets: tuple[int, ...] | None = None  # None = config.pad_beta
+    level_step: int = 4  # level-loop bound rounding (config.pad_levels)
+    budget_override: int | None = None  # None = k + ceil(gamma * n)
+    host_encode: bool = True  # f64 query codes (exact vs planner); False =
+    # device f32 encode (standalone engines without exported codes)
+    max_delay_ms: float = 5.0  # async frontend: a partial batch launches
+    # once its oldest request has waited this long (0 = launch on next poll)
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.q_batch < 1:
+            raise ValueError(f"q_batch must be >= 1, got {self.q_batch}")
+        if self.block_n is not None and self.block_n < 1:
+            raise ValueError(
+                f"block_n must be >= 1 or None, got {self.block_n}"
+            )
+        if self.level_step < 1:
+            raise ValueError(f"level_step must be >= 1, got {self.level_step}")
+        if self.budget_override is not None and self.budget_override < 1:
+            raise ValueError(
+                f"budget_override must be >= 1 or None, got "
+                f"{self.budget_override}"
+            )
+        if self.beta_buckets is not None and (
+            len(self.beta_buckets) == 0
+            or any(b < 1 for b in self.beta_buckets)
+        ):
+            raise ValueError(
+                f"beta_buckets must be a non-empty tuple of positive table "
+                f"counts or None, got {self.beta_buckets!r}"
+            )
+        if not (self.max_delay_ms >= 0):  # also rejects NaN
+            raise ValueError(
+                f"max_delay_ms must be >= 0, got {self.max_delay_ms}"
+            )
+        try:
+            jnp.dtype(self.vec_dtype)
+        except TypeError:
+            raise ValueError(f"vec_dtype {self.vec_dtype!r} is not a dtype")
+
+
+# --------------------------------------------------------------- pure helpers
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """One compiled-step launch: up to q_batch same-group submission rows."""
+
+    group_id: int
+    rows: np.ndarray  # global submission indices, submission order
+
+
+def pad_take(n_real: int, q_batch: int) -> np.ndarray:
+    """Gather indices padding ``n_real`` rows to a full ``q_batch``.
+
+    Padding cycles the real rows (a real query repeated is still a valid
+    query for the compiled step); callers slice outputs back to
+    ``[:n_real]`` so padded rows never reach a result.
+    """
+    if not 1 <= n_real <= q_batch:
+        raise ValueError(
+            f"n_real must be in [1, q_batch={q_batch}], got {n_real}"
+        )
+    return np.arange(q_batch) % n_real
+
+
+def coalesce(group_ids: np.ndarray, q_batch: int) -> list[BatchPlan]:
+    """Stable-partition submission indices by group and chunk into batches.
+
+    Within each group the submission order is preserved; every index lands
+    in exactly one plan and every plan holds 1..q_batch rows of one group.
+    """
+    if q_batch < 1:
+        raise ValueError(f"q_batch must be >= 1, got {q_batch}")
+    group_ids = np.atleast_1d(np.asarray(group_ids))
+    plans: list[BatchPlan] = []
+    for gi in np.unique(group_ids):
+        sel = np.where(group_ids == gi)[0]  # ascending = submission order
+        for lo in range(0, len(sel), q_batch):
+            plans.append(BatchPlan(int(gi), sel[lo : lo + q_batch]))
+    return plans
+
+
+def run_plans(plans, queries, weight_ids, run_batch, k):
+    """Execute every BatchPlan and merge outputs back to submission order.
+
+    ``run_batch(group_id, queries, weight_ids)`` must return per-row
+    ``(ids, dists, stop_levels, n_checked)`` for exactly the real rows it
+    was handed (padding is its private business).  Shared by the sync
+    frontend and the batching property tests, which pass a fake executor.
+    """
+    nq = len(queries)
+    out_ids = np.full((nq, k), -1, np.int32)
+    out_d = np.full((nq, k), np.inf, np.float32)
+    out_stop = np.zeros(nq, np.int32)
+    out_chk = np.zeros(nq, np.int32)
+    for bp in plans:
+        ids, d, stop, chk = run_batch(
+            bp.group_id, queries[bp.rows], weight_ids[bp.rows]
+        )
+        out_ids[bp.rows] = ids
+        out_d[bp.rows] = d
+        out_stop[bp.rows] = stop
+        out_chk[bp.rows] = chk
+    return out_ids, out_d, out_stop, out_chk
+
+
+# ---------------------------------------------------------------------- stats
+
+
+@dataclasses.dataclass
+class GroupServeStats:
+    """Per-group serving counters (reset with ``Batcher.reset_stats``).
+
+    Running sums, not samples: a long-lived service must not grow state
+    with traffic.
+    """
+
+    n_queries: int = 0
+    n_batches: int = 0
+    n_padded: int = 0  # padded rows across ragged batches
+    stop_level_sum: int = 0
+    n_checked_sum: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        filled = self.n_queries + self.n_padded
+        return self.n_queries / filled if filled else 0.0
+
+    def summary(self) -> dict:
+        nq = self.n_queries
+        return dict(
+            n_queries=nq,
+            n_batches=self.n_batches,
+            occupancy=self.occupancy,
+            mean_stop_level=self.stop_level_sum / nq if nq else float("nan"),
+            mean_n_checked=self.n_checked_sum / nq if nq else float("nan"),
+        )
+
+
+# --------------------------------------------------------------------- core
+
+
+class Batcher:
+    """Stateful batching core shared by the sync and async frontends.
+
+    States and compiled steps are built lazily per group (call ``warmup``
+    to front-load); ``step_cache.n_compiled`` counts distinct compiled
+    shape signatures, which stays far below the group count on real plans
+    — and stays pinned no matter which frontend drives the traffic.
+    """
+
+    def __init__(
+        self,
+        plan: ServingPlan,
+        points: np.ndarray,
+        mesh=None,
+        cfg: ServiceConfig | None = None,
+    ):
+        if cfg is None:
+            cfg = ServiceConfig()
+        points = np.ascontiguousarray(points, dtype=np.float32)
+        if points.shape != (plan.n, plan.d):
+            raise ValueError(
+                f"points shape {points.shape} != plan ({plan.n}, {plan.d})"
+            )
+        self.plan = plan
+        self.points = points
+        self.mesh = mesh if mesh is not None else jax.make_mesh(
+            (1, 1), ("data", "model")
+        )
+        self.cfg = cfg
+        self.step_cache = QueryStepCache()
+        self._group_cfgs: dict[int, IndexConfig] = {}
+        self._states: dict[int, object] = {}
+        self.stats: dict[int, GroupServeStats] = {
+            gi: GroupServeStats() for gi in range(plan.n_groups)
+        }
+
+    # ------------------------------------------------------------- per group
+
+    def _block_n(self) -> int:
+        n_loc = self.plan.n // self.mesh.size
+        want = self.cfg.block_n if self.cfg.block_n is not None else n_loc
+        block = max(1, min(want, n_loc))
+        while n_loc % block:
+            block -= 1
+        return block
+
+    def group_config(self, gi: int) -> IndexConfig:
+        """Padded IndexConfig for group ``gi`` (the jit-cache key)."""
+        cfg = self._group_cfgs.get(gi)
+        if cfg is None:
+            g = self.plan.groups[gi]
+            cfg = IndexConfig(
+                n=self.plan.n,
+                d=self.plan.d,
+                beta=pad_beta(g.beta_group, self.cfg.beta_buckets),
+                q_batch=self.cfg.q_batch,
+                k=self.cfg.k,
+                c=self.plan.c,
+                n_levels=pad_levels(g.n_levels_max, self.cfg.level_step),
+                p=self.plan.p,
+                block_n=self._block_n(),
+                gamma_n=self.plan.gamma_n,
+                budget_override=self.cfg.budget_override,
+                vec_dtype=self.cfg.vec_dtype,
+                use_pallas=self.cfg.use_pallas,
+            )
+            self._group_cfgs[gi] = cfg
+        return cfg
+
+    def _group(self, gi: int):
+        cfg = self.group_config(gi)
+        state = self._states.get(gi)
+        if state is None:
+            state = build_group_state(
+                self.mesh, cfg, self.points, self.plan.groups[gi]
+            )
+            self._states[gi] = state
+        return cfg, state, self.step_cache.get(self.mesh, cfg)
+
+    def warmup(self, groups=None) -> None:
+        """Build states and compile steps ahead of traffic."""
+        for gi in groups if groups is not None else range(self.plan.n_groups):
+            self._group(int(gi))
+
+    def reset_stats(self) -> None:
+        for gi in self.stats:
+            self.stats[gi] = GroupServeStats()
+
+    def stats_summary(self) -> dict[int, dict]:
+        return {gi: s.summary() for gi, s in self.stats.items()
+                if s.n_batches}
+
+    def mean_occupancy(self) -> float:
+        """Unweighted mean batch occupancy over groups that served traffic."""
+        occs = [s.occupancy for s in self.stats.values() if s.n_batches]
+        return float(np.mean(occs)) if occs else float("nan")
+
+    # --------------------------------------------------------------- serving
+
+    def route(self, weight_ids) -> np.ndarray:
+        """(Q,) serving group per weight_id, validated against the plan."""
+        weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
+        if len(weight_ids) and (
+            weight_ids.min() < 0 or weight_ids.max() >= self.plan.n_weights
+        ):
+            raise ValueError("weight_id out of range for the serving plan")
+        return self.plan.group_of[weight_ids].astype(np.int32)
+
+    def _encode(self, gi: int, cfg: IndexConfig, state, queries,
+                take: np.ndarray) -> np.ndarray:
+        """(q_batch, beta) codes for real ``queries`` padded via ``take``.
+
+        Query and data codes must come from the same encoding: host f64
+        only pairs with plan-shipped host codes; a device-built (f32)
+        state needs device-encoded queries, or floor-boundary jitter
+        mixes the two encodings and a query can miss its own point.
+        Encoding is row-independent, so the host path encodes each real
+        row once and gathers (no pad-duplicate work), while the device
+        path encodes the padded batch to keep a fixed compiled shape.
+        """
+        g = self.plan.groups[gi]
+        if self.cfg.host_encode and g.codes is not None:
+            return pad_cols(g.encode_host(queries), cfg.beta)[take]
+        return np.asarray(encode_queries(state, queries[take]))
+
+    def run_batch(self, gi: int, queries, weight_ids):
+        """One compiled-step launch for 1..q_batch same-group requests.
+
+        Pads ragged input by cycling the real rows, encodes the padded
+        batch (row-independent, so padding cannot perturb real rows), and
+        returns ``(ids, dists, stop_levels, n_checked)`` sliced back to the
+        real rows.  Both frontends answer every query through this method,
+        which is what makes them bit-exact on identical traffic.
+        """
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
+        cfg, state, step = self._group(gi)
+        real = len(queries)
+        take = pad_take(real, cfg.q_batch)
+        g = self.plan.groups[gi]
+        qtake = queries[take]
+        wtake = weight_ids[take]
+        slots = self.plan.member_slot[wtake]
+        codes = self._encode(gi, cfg, state, queries, take).astype(np.int32)
+        d_b, i_b, stop_b, chk_b = step(
+            state,
+            jnp.asarray(qtake),
+            jnp.asarray(codes),
+            jnp.asarray(self.plan.weights[wtake].astype(np.float32)),
+            jnp.asarray(g.mu_members[slots].astype(np.int32)),
+            jnp.asarray(g.r_min_members[slots].astype(np.float32)),
+            jnp.asarray(g.beta_members[slots].astype(np.int32)),
+            jnp.asarray(g.n_levels_members[slots].astype(np.int32)),
+        )
+        ids = np.asarray(i_b)[:real]
+        dists = np.asarray(d_b)[:real]
+        stop = np.asarray(stop_b)[:real]
+        chk = np.asarray(chk_b)[:real]
+        st = self.stats[gi]
+        st.n_batches += 1
+        st.n_queries += real
+        st.n_padded += cfg.q_batch - real
+        st.stop_level_sum += int(np.sum(stop))
+        st.n_checked_sum += int(np.sum(chk))
+        return ids, dists, stop, chk

@@ -3,22 +3,25 @@
 The host planner partitions the weight vector set S into table groups
 (Algorithm 1); every incoming query carries a ``weight_id`` naming its
 distance function, and must be answered in *that* weight's group
-(Algorithm 2).  This module is the serving layer between the two:
+(Algorithm 2).  Serving splits into a shared core and two frontends:
 
-  route     each (query, weight_id) -> plan.group_of[weight_id]
-  coalesce  same-group queries into fixed-shape batches (the sharded step
-            already supports per-query mu / r_min / beta_q / levels_q, so
-            queries under different member weights share a batch)
-  pad       ragged tail batches by repeating a real row, masked on output
-  execute   one compiled query step per *shape signature*, not per group:
-            group shapes quantize onto beta/level buckets (config.pad_beta
-            / pad_levels) and equal IndexConfigs share a step through
-            QueryStepCache
-  merge     per-query results back into submission order
+  * ``batching.Batcher`` — the frontend-independent core: route each
+    (query, weight_id) to ``plan.group_of[weight_id]``, pad ragged
+    batches by cycling real rows, launch one compiled query step per
+    *shape signature* (groups quantized onto beta/level buckets share a
+    step through ``QueryStepCache``), and keep per-group serving stats.
+  * ``RetrievalService`` (this module) — the synchronous frontend: all
+    queries of a call are present up front, so they are coalesced into
+    maximal same-group batches and answered in submission order.
+  * ``async_service.AsyncRetrievalService`` — the asynchronous frontend:
+    individual submissions accumulate in per-group pending buffers and a
+    batch launches when it fills *or* the oldest request's deadline
+    (``ServiceConfig.max_delay_ms``) expires.
 
-Query bucket codes are computed host-side in float64 against the exported
-family — bit-exact with the planner's table codes when the plan ships them —
-so the service's candidate sets match `WLSHIndex.search_dense` per query.
+Both frontends answer every query through ``Batcher.run_batch``, so they
+are bit-exact with each other — and with ``WLSHIndex.search_dense`` —
+on identical traffic.  Query bucket codes are computed host-side in
+float64 against the exported family when the plan ships host codes.
 Per-group serving stats (batch occupancy, stop-level / n_checked
 distributions) feed the serving benchmarks.
 """
@@ -27,14 +30,16 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.serving_plan import ServingPlan
-from ..index.builder import build_group_state, pad_cols
-from ..index.config import IndexConfig, pad_beta, pad_levels
-from ..index.engine import QueryStepCache, encode_queries
+from .batching import (
+    Batcher,
+    GroupServeStats,
+    ServiceConfig,
+    coalesce,
+    run_plans,
+)
 
 __all__ = [
     "GroupServeStats",
@@ -42,52 +47,6 @@ __all__ = [
     "RetrievalService",
     "ServiceConfig",
 ]
-
-
-@dataclasses.dataclass(frozen=True)
-class ServiceConfig:
-    """Serving-side knobs (plan parameters come from the ServingPlan)."""
-
-    k: int = 10
-    q_batch: int = 8  # compiled batch shape; ragged tails are padded
-    block_n: int | None = None  # points per scan block; None = whole shard
-    vec_dtype: str = "float32"
-    use_pallas: bool | None = None  # None = auto (TPU only)
-    beta_buckets: tuple[int, ...] | None = None  # None = config.pad_beta
-    level_step: int = 4  # level-loop bound rounding (config.pad_levels)
-    budget_override: int | None = None  # None = k + ceil(gamma * n)
-    host_encode: bool = True  # f64 query codes (exact vs planner); False =
-    # device f32 encode (standalone engines without exported codes)
-
-
-@dataclasses.dataclass
-class GroupServeStats:
-    """Per-group serving counters (reset with RetrievalService.reset_stats).
-
-    Running sums, not samples: a long-lived service must not grow state
-    with traffic.
-    """
-
-    n_queries: int = 0
-    n_batches: int = 0
-    n_padded: int = 0  # padded rows across ragged batches
-    stop_level_sum: int = 0
-    n_checked_sum: int = 0
-
-    @property
-    def occupancy(self) -> float:
-        filled = self.n_queries + self.n_padded
-        return self.n_queries / filled if filled else 0.0
-
-    def summary(self) -> dict:
-        nq = self.n_queries
-        return dict(
-            n_queries=nq,
-            n_batches=self.n_batches,
-            occupancy=self.occupancy,
-            mean_stop_level=self.stop_level_sum / nq if nq else float("nan"),
-            mean_n_checked=self.n_checked_sum / nq if nq else float("nan"),
-        )
 
 
 @dataclasses.dataclass
@@ -102,11 +61,13 @@ class RetrievalResult:
 
 
 class RetrievalService:
-    """Weight-routed serving front end over the sharded group engine.
+    """Synchronous weight-routed frontend over the shared ``Batcher`` core.
 
     States and compiled steps are built lazily per group (call ``warmup``
     to front-load); ``step_cache.n_compiled`` counts distinct compiled
     shape signatures, which stays far below the group count on real plans.
+    Pass the service (or its ``batcher``) to ``AsyncRetrievalService`` to
+    serve streaming traffic over the same states, stats and step cache.
     """
 
     def __init__(
@@ -116,91 +77,53 @@ class RetrievalService:
         mesh=None,
         cfg: ServiceConfig = ServiceConfig(),
     ):
-        points = np.ascontiguousarray(points, dtype=np.float32)
-        if points.shape != (plan.n, plan.d):
-            raise ValueError(
-                f"points shape {points.shape} != plan ({plan.n}, {plan.d})"
-            )
-        self.plan = plan
-        self.points = points
-        self.mesh = mesh if mesh is not None else jax.make_mesh(
-            (1, 1), ("data", "model")
-        )
-        self.cfg = cfg
-        self.step_cache = QueryStepCache()
-        self._group_cfgs: dict[int, IndexConfig] = {}
-        self._states: dict[int, object] = {}
-        self.stats: dict[int, GroupServeStats] = {
-            gi: GroupServeStats() for gi in range(plan.n_groups)
-        }
+        self.batcher = Batcher(plan, points, mesh=mesh, cfg=cfg)
 
-    # ------------------------------------------------------------- per group
+    # ------------------------------------------------- shared-core delegation
 
-    def _block_n(self) -> int:
-        n_loc = self.plan.n // self.mesh.size
-        want = self.cfg.block_n if self.cfg.block_n is not None else n_loc
-        block = max(1, min(want, n_loc))
-        while n_loc % block:
-            block -= 1
-        return block
+    @property
+    def plan(self) -> ServingPlan:
+        return self.batcher.plan
 
-    def group_config(self, gi: int) -> IndexConfig:
+    @property
+    def points(self) -> np.ndarray:
+        return self.batcher.points
+
+    @property
+    def mesh(self):
+        return self.batcher.mesh
+
+    @property
+    def cfg(self) -> ServiceConfig:
+        return self.batcher.cfg
+
+    @property
+    def step_cache(self):
+        return self.batcher.step_cache
+
+    @property
+    def stats(self) -> dict[int, GroupServeStats]:
+        return self.batcher.stats
+
+    def group_config(self, gi: int):
         """Padded IndexConfig for group ``gi`` (the jit-cache key)."""
-        cfg = self._group_cfgs.get(gi)
-        if cfg is None:
-            g = self.plan.groups[gi]
-            cfg = IndexConfig(
-                n=self.plan.n,
-                d=self.plan.d,
-                beta=pad_beta(g.beta_group, self.cfg.beta_buckets),
-                q_batch=self.cfg.q_batch,
-                k=self.cfg.k,
-                c=self.plan.c,
-                n_levels=pad_levels(g.n_levels_max, self.cfg.level_step),
-                p=self.plan.p,
-                block_n=self._block_n(),
-                gamma_n=self.plan.gamma_n,
-                budget_override=self.cfg.budget_override,
-                vec_dtype=self.cfg.vec_dtype,
-                use_pallas=self.cfg.use_pallas,
-            )
-            self._group_cfgs[gi] = cfg
-        return cfg
-
-    def _group(self, gi: int):
-        cfg = self.group_config(gi)
-        state = self._states.get(gi)
-        if state is None:
-            state = build_group_state(
-                self.mesh, cfg, self.points, self.plan.groups[gi]
-            )
-            self._states[gi] = state
-        return cfg, state, self.step_cache.get(self.mesh, cfg)
+        return self.batcher.group_config(gi)
 
     def warmup(self, groups=None) -> None:
         """Build states and compile steps ahead of traffic."""
-        for gi in groups if groups is not None else range(self.plan.n_groups):
-            self._group(int(gi))
+        self.batcher.warmup(groups)
 
     def reset_stats(self) -> None:
-        for gi in self.stats:
-            self.stats[gi] = GroupServeStats()
+        self.batcher.reset_stats()
 
     def stats_summary(self) -> dict[int, dict]:
-        return {gi: s.summary() for gi, s in self.stats.items()
-                if s.n_batches}
+        return self.batcher.stats_summary()
+
+    def mean_occupancy(self) -> float:
+        """Unweighted mean batch occupancy over groups that served traffic."""
+        return self.batcher.mean_occupancy()
 
     # --------------------------------------------------------------- serving
-
-    def _encode(self, gi: int, cfg: IndexConfig, state, queries) -> np.ndarray:
-        g = self.plan.groups[gi]
-        # Query and data codes must come from the same encoding: host f64
-        # only pairs with plan-shipped host codes; a device-built (f32)
-        # state needs device-encoded queries, or floor-boundary jitter
-        # mixes the two encodings and a query can miss its own point.
-        if self.cfg.host_encode and g.codes is not None:
-            return pad_cols(g.encode_host(queries), cfg.beta)
-        return np.asarray(encode_queries(state, queries))
 
     def query(self, queries: np.ndarray, weight_ids) -> RetrievalResult:
         """Answer a mixed batch of (query, weight_id) requests.
@@ -210,61 +133,16 @@ class RetrievalService:
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
-        nq = len(queries)
-        if len(weight_ids) != nq:
+        if len(weight_ids) != len(queries):
             raise ValueError("queries and weight_ids length mismatch")
-        if nq and (weight_ids.min() < 0 or weight_ids.max() >= self.plan.n_weights):
-            raise ValueError("weight_id out of range for the serving plan")
-        k, qb = self.cfg.k, self.cfg.q_batch
-
-        out_ids = np.full((nq, k), -1, np.int32)
-        out_d = np.full((nq, k), np.inf, np.float32)
-        out_stop = np.zeros(nq, np.int32)
-        out_chk = np.zeros(nq, np.int32)
-        gids = self.plan.group_of[weight_ids].astype(np.int32)
-
-        for gi in np.unique(gids):
-            gi = int(gi)
-            sel = np.where(gids == gi)[0]  # submission order within group
-            cfg, state, step = self._group(gi)
-            g = self.plan.groups[gi]
-            slots = self.plan.member_slot[weight_ids[sel]]
-            mus = g.mu_members[slots].astype(np.int32)
-            betas = g.beta_members[slots].astype(np.int32)
-            rmins = g.r_min_members[slots].astype(np.float32)
-            levels = g.n_levels_members[slots].astype(np.int32)
-            qsel = queries[sel]
-            codes = self._encode(gi, cfg, state, qsel).astype(np.int32)
-            wsel = self.plan.weights[weight_ids[sel]].astype(np.float32)
-            st = self.stats[gi]
-
-            for lo in range(0, len(sel), qb):
-                hi = min(lo + qb, len(sel))
-                real = hi - lo
-                # pad ragged tails by cycling the batch's real rows; padded
-                # outputs are sliced away below
-                take = lo + (np.arange(qb) % real)
-                d_b, i_b, stop_b, chk_b = step(
-                    state,
-                    jnp.asarray(qsel[take]),
-                    jnp.asarray(codes[take]),
-                    jnp.asarray(wsel[take]),
-                    jnp.asarray(mus[take]),
-                    jnp.asarray(rmins[take]),
-                    jnp.asarray(betas[take]),
-                    jnp.asarray(levels[take]),
-                )
-                rows = sel[lo:hi]
-                out_d[rows] = np.asarray(d_b)[:real]
-                out_ids[rows] = np.asarray(i_b)[:real]
-                out_stop[rows] = np.asarray(stop_b)[:real]
-                out_chk[rows] = np.asarray(chk_b)[:real]
-                st.n_batches += 1
-                st.n_queries += real
-                st.n_padded += qb - real
-                st.stop_level_sum += int(np.sum(np.asarray(stop_b)[:real]))
-                st.n_checked_sum += int(np.sum(np.asarray(chk_b)[:real]))
-
+        gids = self.batcher.route(weight_ids)
+        out_ids, out_d, out_stop, out_chk = run_plans(
+            coalesce(gids, self.cfg.q_batch),
+            queries,
+            weight_ids,
+            self.batcher.run_batch,
+            self.cfg.k,
+        )
         return RetrievalResult(
             ids=out_ids,
             dists=out_d,

@@ -26,6 +26,47 @@ if HAVE_HYPOTHESIS:
     settings.load_profile("ci")
 
 
+_parity_cache: dict = {}
+
+
+def build_parity_service(p: float):
+    """Session-cached (p, data, weights, host, plan, svc) per exponent.
+
+    One serving build per p in {2, 1, 0.5} (paper tau defaults for l2/l1,
+    scaled up for the heavier-tailed p=0.5 family), shared by the service
+    parity suite, the async frontend suite, and the p=2 structure tests so
+    the expensive partition/plan/build step runs once per exponent.
+    """
+    if p not in _parity_cache:
+        from repro.core.datagen import make_dataset, make_weight_set
+        from repro.core.params import PlanConfig
+        from repro.core.wlsh import WLSHIndex
+        from repro.serving import RetrievalService, ServiceConfig
+
+        tau = {2.0: 500.0, 1.0: 1_000.0, 0.5: 2_000.0}[p]
+        data = make_dataset(n=1_024, d=16, seed=41)
+        # 4 subsets of 2 users -> the partition yields >= 3 groups with
+        # distinct per-member beta/mu at every supported exponent
+        weights = make_weight_set(size=8, d=16, n_subset=4, n_subrange=10,
+                                  seed=42)
+        cfg = PlanConfig(p=p, c=3, n=len(data), gamma_n=100.0)
+        host = WLSHIndex(data, weights, cfg, tau=tau, v=4, v_prime=4,
+                         seed=9)
+        plan = host.export_serving_plan()
+        assert plan.n_groups >= 3, "fixture must span >= 3 table groups"
+        svc = RetrievalService(plan, data,
+                               cfg=ServiceConfig(k=5, q_batch=4))
+        _parity_cache[p] = (p, data, weights, host, plan, svc)
+    return _parity_cache[p]
+
+
+@pytest.fixture(scope="session", params=[2.0, 1.0, 0.5],
+                ids=lambda p: f"p{p}")
+def parity_setup(request):
+    """(p, data, weights, host, plan, svc) per distance exponent."""
+    return build_parity_service(request.param)
+
+
 @pytest.fixture(scope="session")
 def small_data():
     from repro.core.datagen import make_dataset

@@ -1,11 +1,17 @@
-"""Multi-group retrieval service vs the host oracle.
+"""Multi-group retrieval service vs the host oracle, and the batching core.
 
 The service must route every query to its weight's table group, answer a
 mixed batch spanning >= 3 groups *identically* to `WLSHIndex.search_dense`
-(the plan ships host codes and the service host-encodes queries in f64, so
-candidate sets match bit-exactly; distances compare in f32), coalesce and
-pad batches without changing per-query answers, and compile at most one
-query step per distinct padded shape signature.
+for every supported exponent p in {2, 1, 0.5} (the plan ships host codes
+and the service host-encodes queries in f64, so candidate sets match
+bit-exactly; distances compare in f32), coalesce and pad batches without
+changing per-query answers, and compile at most one query step per
+distinct padded shape signature.
+
+The shared batching core (`serving.batching`) is additionally pinned by
+hypothesis property tests against a fake executor: arbitrary interleavings
+of group ids and ragged tails always merge back in submission order with
+no dropped or duplicated query, and padded rows never leak into results.
 """
 
 from __future__ import annotations
@@ -13,28 +19,20 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.core.datagen import make_dataset, make_weight_set
-from repro.core.params import PlanConfig
+from _hyp import given, settings, st
+from conftest import build_parity_service
 from repro.core.serving_plan import ServingPlan
-from repro.core.wlsh import WLSHIndex
 from repro.serving import RetrievalService, ServiceConfig
+from repro.serving.batching import coalesce, pad_take, run_plans
 
 K = 5
 
 
 @pytest.fixture(scope="module")
 def setup():
-    data = make_dataset(n=1_024, d=16, seed=41)
-    # 4 subsets of 2 users -> the partition yields 4 groups with distinct
-    # per-member beta/mu (betas 135/135/137/161 at these seeds)
-    weights = make_weight_set(size=8, d=16, n_subset=4, n_subrange=10,
-                              seed=42)
-    cfg = PlanConfig(p=2.0, c=3, n=len(data), gamma_n=100.0)
-    host = WLSHIndex(data, weights, cfg, tau=500.0, v=4, v_prime=4, seed=9)
-    plan = host.export_serving_plan()
-    assert plan.n_groups >= 3, "fixture must span >= 3 table groups"
-    svc = RetrievalService(plan, data, cfg=ServiceConfig(k=K, q_batch=4))
-    return data, weights, host, plan, svc
+    # the p=2 instance of the session parity build (betas 135/135/137/161
+    # at these seeds); structure tests share it with the parity suite
+    return build_parity_service(2.0)[1:]
 
 
 def _mixed_queries(data, weights, n_queries, seed=43):
@@ -60,8 +58,9 @@ def test_routing_follows_partition(setup):
     assert len(betas) >= 2 and len(mus) >= 3
 
 
-def test_mixed_batch_matches_search_dense(setup):
-    data, weights, host, plan, svc = setup
+def test_mixed_batch_matches_search_dense(parity_setup):
+    """Bit-exact ids/stop/n_checked vs the host oracle, per p in {2, 1, 0.5}."""
+    p, data, weights, host, plan, svc = parity_setup
     qpts, wids = _mixed_queries(data, weights, 24)
     res = svc.query(qpts, wids)
     assert len(np.unique(res.group_ids)) >= 3
@@ -69,7 +68,7 @@ def test_mixed_batch_matches_search_dense(setup):
         want = host.search_dense(qpts[qi], weight_id=int(wids[qi]), k=K)
         np.testing.assert_array_equal(
             res.ids[qi], want.ids.astype(np.int32),
-            err_msg=f"ids mismatch at query {qi} (weight {wids[qi]})",
+            err_msg=f"ids mismatch at query {qi} (weight {wids[qi]}, p={p})",
         )
         assert int(res.stop_levels[qi]) == want.stats.stop_level
         assert int(res.n_checked[qi]) == want.stats.n_checked
@@ -191,3 +190,114 @@ def test_weight_id_validation(setup):
         svc.query(q, [-1])
     with pytest.raises(ValueError):
         svc.query(data[:2].astype(np.float32), [0])
+
+
+# ------------------------------------------------------- config validation
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(q_batch=0),
+    dict(q_batch=-3),
+    dict(k=0),
+    dict(block_n=0),
+    dict(level_step=0),
+    dict(budget_override=0),
+    dict(max_delay_ms=-1.0),
+    dict(max_delay_ms=float("nan")),
+    dict(beta_buckets=()),
+    dict(beta_buckets=(0, 32)),
+    dict(vec_dtype="not-a-dtype"),
+])
+def test_service_config_rejects_invalid(kwargs):
+    with pytest.raises(ValueError):
+        ServiceConfig(**kwargs)
+
+
+def test_service_config_accepts_defaults_and_edges():
+    ServiceConfig()  # defaults must validate
+    ServiceConfig(q_batch=1, k=1, level_step=1, max_delay_ms=0.0,
+                  block_n=1, budget_override=1, beta_buckets=(32, 512),
+                  vec_dtype="bfloat16")
+
+
+# ------------------------------- batching core properties (fake executor)
+
+
+@st.composite
+def _traffic_shape(draw):
+    """Arbitrary interleaving of group ids plus a compiled batch size."""
+    n_groups = draw(st.integers(1, 5))
+    gids = draw(st.lists(st.integers(0, n_groups - 1), min_size=1,
+                         max_size=48))
+    q_batch = draw(st.integers(1, 9))
+    return np.asarray(gids), q_batch
+
+
+@given(_traffic_shape())
+@settings(max_examples=100, deadline=None)
+def test_coalesce_partitions_every_submission_once(traffic):
+    gids, qb = traffic
+    plans = coalesce(gids, qb)
+    rows = np.concatenate([bp.rows for bp in plans])
+    assert sorted(rows.tolist()) == list(range(len(gids)))  # no drop/dup
+    for bp in plans:
+        assert 1 <= len(bp.rows) <= qb
+        assert np.all(gids[bp.rows] == bp.group_id)
+        assert np.all(np.diff(bp.rows) > 0)  # submission order within batch
+    for gi in np.unique(gids):
+        served = int(np.sum(gids == gi))
+        n_batches = sum(bp.group_id == gi for bp in plans)
+        assert n_batches == -(-served // qb)  # minimal batch count
+
+
+@given(st.integers(1, 9))
+@settings(max_examples=50, deadline=None)
+def test_pad_take_cycles_real_rows(qb):
+    for real in range(1, qb + 1):
+        take = pad_take(real, qb)
+        assert take.shape == (qb,)
+        np.testing.assert_array_equal(take[:real], np.arange(real))
+        np.testing.assert_array_equal(take, np.arange(qb) % real)
+    with pytest.raises(ValueError):
+        pad_take(0, qb)
+    with pytest.raises(ValueError):
+        pad_take(qb + 1, qb)
+
+
+@given(_traffic_shape())
+@settings(max_examples=100, deadline=None)
+def test_run_plans_merges_in_submission_order_without_pad_leak(traffic):
+    """A fake executor tags each padded row; merged results must hold every
+    submission's own tag exactly once and never a pad poison value."""
+    gids, qb = traffic
+    nq, k = len(gids), 3
+    queries = np.arange(nq, dtype=np.float32).reshape(nq, 1)  # row tag
+    wids = np.arange(nq)  # weight_ids double as submission indices
+    pad_poison = -7
+    reals = []
+
+    def fake_run_batch(gi, qsub, wsub):
+        real = len(qsub)
+        assert 1 <= real <= qb
+        assert np.all(gids[wsub] == gi)  # only rows routed to this group
+        np.testing.assert_array_equal(qsub[:, 0].astype(np.int64), wsub)
+        take = pad_take(real, qb)
+        padded_rows = wsub[take]  # what the compiled step would see
+        ids = np.repeat(padded_rows[:, None], k, 1).astype(np.int32)
+        stop = padded_rows.astype(np.int32)
+        ids[real:] = pad_poison  # poison pad outputs: must never merge
+        stop[real:] = pad_poison
+        reals.append(real)
+        return (ids[:real], ids[:real].astype(np.float32),
+                stop[:real], stop[:real])
+
+    out_ids, out_d, out_stop, out_chk = run_plans(
+        coalesce(gids, qb), queries, wids, fake_run_batch, k
+    )
+    want = np.repeat(np.arange(nq, dtype=np.int32)[:, None], k, 1)
+    np.testing.assert_array_equal(out_ids, want)  # submission order kept
+    np.testing.assert_array_equal(out_stop, np.arange(nq))
+    np.testing.assert_array_equal(out_chk, np.arange(nq))
+    assert not np.any(out_ids == pad_poison)
+    assert not np.any(out_stop == pad_poison)
+    assert sum(reals) == nq  # every query executed exactly once
