@@ -17,12 +17,17 @@ pins a baseline for that path:
            served by the async deadline-aware frontend over arrival rate x
            max_delay_ms, vs the sync single-submission baseline — batch
            occupancy bought with bounded queue wait
+  sweep 4  group-state paging: the same mixed trace served with the
+           StateCache capped at a shrinking resident fraction of the
+           plan's groups (1.0 -> 0.25) — throughput and state hit-rate
+           vs device-memory budget, answers bit-exact throughout
 
 Validation checks assert the structural claims future PRs must not regress:
 compiled steps stay below group count (shape-bucket sharing), full batches
 beat 1-query submissions on throughput, the async frontend answers the
-trace bit-exactly, and deadline batching lifts mean occupancy over
-single-submission on every swept configuration.
+trace bit-exactly, deadline batching lifts mean occupancy over
+single-submission on every swept configuration, and paging stays bit-exact
+with live eviction/restore traffic below full residency.
 
     PYTHONPATH=src python -m benchmarks.run --only serve_bench
 """
@@ -163,6 +168,47 @@ def run(full: bool = False) -> dict:
         rows_async,
     )
 
+    # ---- sweep 4: group-state paging under a device-memory budget -----------
+    # same mixed trace, submitted in q_batch chunks so group launches
+    # interleave (the access pattern that actually exercises LRU paging),
+    # with the StateCache capped at a shrinking fraction of the groups
+    qpts, wids = _traffic(data, pool, n_queries, rng)
+    ref_res = svc.query(qpts, wids)
+    rows_paging = []
+    paging_exact = True
+    for frac in (1.0, 0.75, 0.5, 0.25):
+        cap = max(1, int(np.ceil(frac * plan.n_groups)))
+        psvc = RetrievalService(
+            plan, data,
+            cfg=ServiceConfig(k=K, q_batch=Q_BATCH, use_pallas=False,
+                              max_resident_groups=cap),
+        )
+        psvc.warmup()  # builds every state once; excess groups host-offload
+        psvc.reset_stats()
+        outs = []
+        with Timer() as t:
+            for lo in range(0, n_queries, Q_BATCH):
+                outs.append(
+                    psvc.query(qpts[lo : lo + Q_BATCH],
+                               wids[lo : lo + Q_BATCH]).ids
+                )
+        cs = psvc.state_cache.stats
+        paging_exact &= bool(
+            np.array_equal(np.concatenate(outs), ref_res.ids)
+        )
+        rows_paging.append([
+            frac, cap, plan.n_groups, n_queries / t.seconds,
+            float(cs.hit_rate), cs.n_evictions, cs.n_restores, cs.n_builds,
+            psvc.state_cache.resident_bytes,
+        ])
+    print_table(
+        "group-state paging vs resident fraction "
+        f"({'bit-exact' if paging_exact else 'MISMATCH'} vs full residency)",
+        ["resident frac", "cap", "groups", "q/s", "hit rate", "evictions",
+         "restores", "rebuilds", "resident bytes"],
+        rows_paging,
+    )
+
     qps_full = rows_occ[-1][2]
     qps_single = rows_occ[0][2]
     occ_async_min = min(r[2] for r in rows_async)
@@ -194,6 +240,25 @@ def run(full: bool = False) -> dict:
                      "single-submission",
             "ok": bool(occ_async_max >= 2 * occ_sync),
         },
+        {
+            "check": "paging bit-exact vs full residency at every "
+                     "resident fraction",
+            "ok": paging_exact,
+        },
+        {
+            "check": "full residency serves with hit rate 1.0 after warmup",
+            "ok": bool(rows_paging[0][4] == 1.0),
+        },
+        {
+            "check": "capped residency pages live (evictions and restores "
+                     "> 0 at the smallest fraction)",
+            "ok": bool(rows_paging[-1][5] > 0 and rows_paging[-1][6] > 0),
+        },
+        {
+            "check": "state hit rate decreases as the resident fraction "
+                     "shrinks",
+            "ok": bool(rows_paging[-1][4] < rows_paging[0][4]),
+        },
     ]
     for v in validation:
         print(("PASS " if v["ok"] else "FAIL ") + v["check"])
@@ -212,6 +277,12 @@ def run(full: bool = False) -> dict:
         ],
         "occupancy_sync_single": occ_sync,
         "qps_sync_single": qps_sync_single,
+        "paging_sweep": rows_paging,
+        "paging_sweep_columns": [
+            "resident_fraction", "max_resident_groups", "n_groups",
+            "qps", "state_hit_rate", "n_evictions", "n_restores",
+            "n_rebuilds", "resident_bytes",
+        ],
         "validation": validation,
     }
     save("serve_bench", payload)

@@ -67,14 +67,17 @@ class GroupServingPlan:
 
     @property
     def n_members(self) -> int:
+        """Number of weight vectors served by this group."""
         return len(self.member_ids)
 
     @property
     def n_levels_max(self) -> int:
+        """Largest member level cap (the group's compiled loop bound)."""
         return int(np.max(self.n_levels_members))
 
     @property
     def d(self) -> int:
+        """Dimensionality of the indexed points."""
         return self.proj.shape[0]
 
     def family(self) -> LpFamilyParams:
@@ -129,17 +132,21 @@ class ServingPlan:
 
     @property
     def n_groups(self) -> int:
+        """Number of table groups in the plan."""
         return len(self.groups)
 
     @property
     def n_weights(self) -> int:
+        """Size of the weight vector set S the plan covers."""
         return len(self.group_of)
 
     @property
     def beta_total(self) -> int:
+        """Total hash tables materialized across all groups."""
         return int(sum(g.beta_group for g in self.groups))
 
     def member_params(self, weight_id: int) -> MemberParams:
+        """Resolve one weight id to its (group, slot) query parameters."""
         gi = int(self.group_of[weight_id])
         slot = int(self.member_slot[weight_id])
         g = self.groups[gi]
@@ -164,6 +171,13 @@ class ServingPlan:
     )
 
     def save_npz(self, path: str) -> None:
+        """Write the plan to ``path`` as a flat compressed npz archive.
+
+        Arrays are stored verbatim (dtypes preserved exactly — the
+        round-trip regression test pins this, it is what makes a reloaded
+        plan serve bit-identically); scalars travel in an embedded JSON
+        blob.  Per-group host codes are included only when present.
+        """
         meta = {f: getattr(self, f) for f in self._META_FIELDS}
         meta["n_groups"] = self.n_groups
         payload: dict[str, np.ndarray] = {
@@ -186,6 +200,7 @@ class ServingPlan:
 
     @classmethod
     def load_npz(cls, path: str) -> "ServingPlan":
+        """Rebuild a ``ServingPlan`` saved by ``save_npz``, bit-exactly."""
         with np.load(path) as z:
             meta = json.loads(bytes(z["meta_json"].tobytes()).decode())
             groups = []

@@ -12,6 +12,7 @@ never touches them:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -30,6 +31,8 @@ __all__ = [
     "make_build_step",
     "build_state",
     "build_group_state",
+    "offload_state",
+    "restore_state",
     "pad_cols",
     "build_input_specs",
 ]
@@ -107,6 +110,54 @@ def build_state(
         b_frac=jax.device_put(jnp.asarray(folded["b_frac"]), rep1),
         width=jax.device_put(jnp.asarray(1.0, jnp.float32),
                              NamedSharding(mesh, P())),
+    )
+
+
+def _state_shardings(mesh: Mesh) -> QueryState:
+    """Per-field shardings of a resident QueryState (rows over all axes)."""
+    pa = _point_axes(mesh)
+    return QueryState(
+        codes=NamedSharding(mesh, P(pa, None)),
+        points=NamedSharding(mesh, P(pa, None)),
+        proj=NamedSharding(mesh, P(None, None)),
+        b_int=NamedSharding(mesh, P(None)),
+        b_frac=NamedSharding(mesh, P(None)),
+        width=NamedSharding(mesh, P()),
+    )
+
+
+def offload_state(state: QueryState) -> QueryState:
+    """Pull a device QueryState into host memory, bit-exactly.
+
+    The host copy is a plain-numpy QueryState (codes keep int32, vectors
+    keep ``vec_dtype`` — bfloat16 arrays come back as ml_dtypes numpy
+    arrays), so a later ``restore_state`` round-trips the exact device
+    bytes: candidate sets and answers are unchanged across an
+    evict/restore cycle.  Dropping the returned value's device-side
+    ancestor frees the group's device footprint.
+    """
+    return QueryState(
+        **{
+            f.name: np.asarray(getattr(state, f.name))
+            for f in dataclasses.fields(QueryState)
+        }
+    )
+
+
+def restore_state(mesh: Mesh, host: QueryState) -> QueryState:
+    """Upload an ``offload_state`` host copy back onto the mesh.
+
+    A pure ``device_put`` per field with the build-time shardings — no
+    re-encode, no recompile — so restore cost is one host-to-device copy
+    of ``IndexConfig.state_nbytes`` bytes and the restored state is
+    bit-identical to the evicted one.
+    """
+    sh = _state_shardings(mesh)
+    return QueryState(
+        **{
+            f.name: jax.device_put(getattr(host, f.name), getattr(sh, f.name))
+            for f in dataclasses.fields(QueryState)
+        }
     )
 
 

@@ -15,12 +15,24 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 __all__ = ["IndexConfig", "pad_beta", "pad_levels"]
 
 # Default table-count buckets: multiples of 32 (the relaxed Eq. 11 betas
 # land in the tens-to-hundreds, Table 6) capped by powers of two above 512.
 _BETA_STEP = 32
 _LEVEL_STEP = 4
+
+
+def _dtype_itemsize(name: str) -> int:
+    """Bytes per element of a dtype name, including the ml_dtypes extras."""
+    try:
+        return np.dtype(name).itemsize
+    except TypeError:
+        import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+
+        return np.dtype(name).itemsize
 
 
 def pad_beta(beta: int, buckets: Sequence[int] | None = None) -> int:
@@ -82,6 +94,22 @@ class IndexConfig:
         if self.budget_override is not None:
             return self.budget_override
         return self.k + int(math.ceil(self.gamma * self.n))
+
+    @property
+    def state_nbytes(self) -> int:
+        """Device bytes of one group's resident ``QueryState`` at this config.
+
+        Accounts every array of the padded state — codes ``(n, beta)`` i32,
+        vectors ``(n, d)`` in ``vec_dtype``, the folded family
+        (``proj (d, beta)`` f32, ``b_int``/``b_frac (beta,)``, ``width ()``)
+        — so the serving ``StateCache`` can budget residency before a group
+        is ever built.  Uses the *padded* beta/n_levels shapes (what is
+        actually materialized), not the group's raw table count.
+        """
+        vec_itemsize = _dtype_itemsize(self.vec_dtype)
+        per_point = self.beta * 4 + self.d * vec_itemsize
+        family = self.d * self.beta * 4 + self.beta * (4 + 4) + 4
+        return self.n * per_point + family
 
     def shape_signature(self) -> tuple:
         """Everything that determines the compiled query step.

@@ -10,7 +10,10 @@ Steps:
   1. plan   — WLSHIndex partitions the weight set into table groups
               (Algorithm 1) and exports a serializable ServingPlan
   2. build  — RetrievalService materializes per-group device state; groups
-              whose padded shapes coincide share one compiled query step
+              whose padded shapes coincide share one compiled query step.
+              ``--max-resident-groups`` / ``--device-budget`` page the
+              states through a budgeted LRU cache (host offload/restore)
+              instead of keeping every group resident
   3. serve  — sync (default): the mixed (query, weight_id) stream arrives
               in one call and is routed, coalesced, padded and answered in
               submission order (Algorithm 2).
@@ -33,6 +36,7 @@ start without re-planning.
 from __future__ import annotations
 
 import argparse
+import re
 import time
 
 import numpy as np
@@ -47,7 +51,32 @@ from ..serving.async_service import (
 )
 from ..serving.retrieval import RetrievalService, ServiceConfig
 
-__all__ = ["run", "main"]
+__all__ = ["parse_bytes", "run", "main"]
+
+_UNITS = {"": 1, "B": 1, "KB": 1 << 10, "MB": 1 << 20, "GB": 1 << 30,
+          "TB": 1 << 40}
+
+
+def parse_bytes(text: str) -> int:
+    """Parse a byte budget like ``"512MB"``, ``"2GB"`` or a plain int."""
+    m = re.fullmatch(r"\s*(\d+(?:\.\d+)?)\s*([A-Za-z]*)\s*", text)
+    unit = m.group(2).upper() if m else None
+    if m is None or unit not in _UNITS:
+        raise argparse.ArgumentTypeError(
+            f"can't parse byte size {text!r} (use e.g. 1073741824, 512MB, "
+            f"2GB)"
+        )
+    if unit == "" and "." in m.group(1):  # "1.5" meaning 1.5GB, probably
+        raise argparse.ArgumentTypeError(
+            f"fractional byte size {text!r} has no unit — missing a "
+            f"KB/MB/GB suffix?"
+        )
+    nbytes = int(float(m.group(1)) * _UNITS[unit])
+    if nbytes < 1:  # "0", "0B", "0.0001KB", ...
+        raise argparse.ArgumentTypeError(
+            f"byte size {text!r} is under 1 byte"
+        )
+    return nbytes
 
 
 def run(args) -> dict:
@@ -79,14 +108,20 @@ def run(args) -> dict:
         plan, data,
         cfg=ServiceConfig(k=args.k, q_batch=args.q_batch,
                           max_delay_ms=args.max_delay_ms,
+                          max_resident_groups=args.max_resident_groups,
+                          device_budget_bytes=args.device_budget,
                           use_pallas=False if args.no_pallas else None),
     )
     svc.warmup()
     t_build = time.time() - t0
-    print(f"build: {plan.n_groups} group states, "
+    cache0 = svc.cache_summary()
+    print(f"build: {plan.n_groups} group states "
+          f"({cache0['n_resident']} resident, "
+          f"{cache0['resident_bytes'] / 2**20:.1f} MiB on device), "
           f"{svc.step_cache.n_compiled} compiled steps "
           f"(shape sharing {plan.n_groups}/{svc.step_cache.n_compiled}) "
           f"in {t_build:.1f}s")
+    svc.reset_stats()  # serve-phase cache counters exclude warmup churn
 
     # ---- serve --------------------------------------------------------------
     wids = rng.integers(0, args.n_weights, size=args.n_queries)
@@ -135,6 +170,14 @@ def run(args) -> dict:
               f"batches, occupancy {s['occupancy']:.2f}, "
               f"mean stop level {s['mean_stop_level']:.1f}, "
               f"mean checked {s['mean_n_checked']:.0f}")
+    cache = svc.cache_summary()
+    if args.max_resident_groups is not None or args.device_budget is not None:
+        print(f"state cache: {cache['n_resident']}/{cache['n_groups']} "
+              f"resident ({cache['resident_bytes'] / 2**20:.1f} MiB), "
+              f"hit rate {cache['hit_rate']:.2f}, "
+              f"{cache['n_evictions']} evictions, "
+              f"{cache['n_restores']} restores, "
+              f"{cache['n_builds']} rebuilds")
 
     n_bad = 0
     if args.check:
@@ -157,6 +200,7 @@ def run(args) -> dict:
         "t_serve": t_serve,
         "qps": args.n_queries / t_serve,
         "stats": svc.stats_summary(),
+        "cache": cache,
         "n_check_failures": n_bad,
         "async": async_report,
     }
@@ -195,6 +239,13 @@ def parse_args(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=2_000.0,
                     help="open-loop Poisson arrival rate (queries/s of "
                          "virtual traffic) for --async replay")
+    ap.add_argument("--max-resident-groups", type=int, default=None,
+                    help="page group states: keep at most this many device-"
+                         "resident (LRU eviction + host offload/restore)")
+    ap.add_argument("--device-budget", type=parse_bytes, default=None,
+                    metavar="BYTES",
+                    help="page group states under this device byte budget "
+                         "(accepts 512MB / 2GB / plain bytes)")
     ap.add_argument("--no-pallas", action="store_true")
     return ap.parse_args(argv)
 

@@ -1,5 +1,9 @@
-"""Serving substrate: sync + async multi-group retrieval frontends over a
-shared batching core, plus the decode loop/samplers."""
+"""Serving substrate for the multi-group retrieval stack.
+
+Sync + async weight-routed frontends over a shared batching core, group
+states paged through a budgeted ``StateCache``, plus the LM decode
+loop/samplers.
+"""
 
 from .async_service import (
     AsyncRetrievalService,
@@ -10,6 +14,7 @@ from .async_service import (
 )
 from .batching import Batcher, BatchPlan, coalesce, pad_take, run_plans
 from .decode import SamplerConfig, generate, make_serve_step
+from .state_cache import CacheStats, StateCache
 from .retrieval import (
     GroupServeStats,
     RetrievalResult,
@@ -21,6 +26,7 @@ __all__ = [
     "AsyncRetrievalService",
     "BatchPlan",
     "Batcher",
+    "CacheStats",
     "GroupServeStats",
     "ManualClock",
     "QueryAnswer",
@@ -29,6 +35,7 @@ __all__ = [
     "RetrievalService",
     "SamplerConfig",
     "ServiceConfig",
+    "StateCache",
     "coalesce",
     "generate",
     "make_serve_step",

@@ -57,12 +57,14 @@ class ManualClock:
         return self.t
 
     def advance(self, dt: float) -> float:
+        """Move the clock forward by ``dt`` seconds (dt < 0 raises)."""
         if dt < 0:
             raise ValueError(f"clock must not run backwards (dt={dt})")
         self.t += dt
         return self.t
 
     def advance_to(self, t: float) -> float:
+        """Jump the clock to absolute time ``t`` (going backwards raises)."""
         if t < self.t:
             raise ValueError(f"clock must not run backwards ({t} < {self.t})")
         self.t = float(t)
@@ -91,9 +93,11 @@ class QueryFuture:
         self.t_resolved: float | None = None  # clock time of the launch
 
     def done(self) -> bool:
+        """Whether the query's batch has launched and the answer is set."""
         return self._done
 
     def result(self) -> QueryAnswer:
+        """The resolved ``QueryAnswer`` (raises while still pending)."""
         if not self._done:
             raise RuntimeError(
                 "query still pending — its batch has not launched yet "
@@ -129,6 +133,11 @@ class AsyncRetrievalService:
     full), ``poll`` (deadline expired) and ``drain``.  A real-time caller
     polls on its event loop at ``next_deadline()``; trace replay drives a
     ``ManualClock`` through the same code path.
+
+    Every launch leases its group's state from the shared ``StateCache``
+    (pinned only while the compiled step runs), so under a residency
+    budget a burst of deadline-driven partial launches pages states
+    between launches — never under one — and answers stay bit-exact.
     """
 
     def __init__(
@@ -159,6 +168,7 @@ class AsyncRetrievalService:
 
     @property
     def pending_count(self) -> int:
+        """Total queued requests across every group's pending buffer."""
         return sum(len(q) for q in self._pending.values())
 
     def next_deadline(self) -> float | None:

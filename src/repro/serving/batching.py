@@ -20,8 +20,12 @@ or deadline):
 the batching invariants — no dropped, duplicated or reordered query, and
 no padded row ever reaching a result — are property-tested against a fake
 executor without touching a device.  ``Batcher`` owns the stateful side:
-lazily built per-group device states, the compiled-step cache, host/device
-query encoding, and per-group serving stats.
+per-group device states paged through a budgeted ``StateCache`` (lazy
+build, LRU eviction, host offload/restore — see ``state_cache``), the
+compiled-step cache, host/device query encoding, and per-group serving
+stats.  Every launch acquires its group's state through the cache and
+pins it only for the duration of the launch, so deadline-driven partial
+launches from the async frontend cannot thrash each other's states.
 """
 
 from __future__ import annotations
@@ -33,9 +37,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.serving_plan import ServingPlan
-from ..index.builder import build_group_state, pad_cols
+from ..index.builder import (
+    build_group_state,
+    offload_state,
+    pad_cols,
+    restore_state,
+)
 from ..index.config import IndexConfig, pad_beta, pad_levels
 from ..index.engine import QueryStepCache, encode_queries
+from .state_cache import StateCache
 
 __all__ = [
     "BatchPlan",
@@ -64,6 +74,12 @@ class ServiceConfig:
     # device f32 encode (standalone engines without exported codes)
     max_delay_ms: float = 5.0  # async frontend: a partial batch launches
     # once its oldest request has waited this long (0 = launch on next poll)
+    max_resident_groups: int | None = None  # StateCache: keep at most this
+    # many group states on device (None = all groups stay resident)
+    device_budget_bytes: int | None = None  # StateCache: keep resident
+    # state bytes (IndexConfig.state_nbytes accounting) under this budget
+    offload_evicted: bool = True  # evicted states keep a host copy (restore
+    # = one upload); False discards them (re-acquire rebuilds from scratch)
 
     def __post_init__(self):
         if self.k < 1:
@@ -92,6 +108,20 @@ class ServiceConfig:
         if not (self.max_delay_ms >= 0):  # also rejects NaN
             raise ValueError(
                 f"max_delay_ms must be >= 0, got {self.max_delay_ms}"
+            )
+        if self.max_resident_groups is not None and (
+            self.max_resident_groups < 1
+        ):
+            raise ValueError(
+                f"max_resident_groups must be >= 1 or None, got "
+                f"{self.max_resident_groups}"
+            )
+        if self.device_budget_bytes is not None and (
+            self.device_budget_bytes < 1
+        ):
+            raise ValueError(
+                f"device_budget_bytes must be >= 1 or None, got "
+                f"{self.device_budget_bytes}"
             )
         try:
             jnp.dtype(self.vec_dtype)
@@ -181,13 +211,20 @@ class GroupServeStats:
     n_padded: int = 0  # padded rows across ragged batches
     stop_level_sum: int = 0
     n_checked_sum: int = 0
+    # state-paging counters, mirrored from the StateCache per group
+    n_state_hits: int = 0  # launches that found the state resident
+    n_state_builds: int = 0  # cold builds of this group's state
+    n_state_restores: int = 0  # host-copy uploads after an eviction
+    n_state_evictions: int = 0  # times this group's state left the device
 
     @property
     def occupancy(self) -> float:
+        """Real-row fraction of the launched (padded) batch rows."""
         filled = self.n_queries + self.n_padded
         return self.n_queries / filled if filled else 0.0
 
     def summary(self) -> dict:
+        """Flat per-group report consumed by the launcher and benchmarks."""
         nq = self.n_queries
         return dict(
             n_queries=nq,
@@ -195,6 +232,10 @@ class GroupServeStats:
             occupancy=self.occupancy,
             mean_stop_level=self.stop_level_sum / nq if nq else float("nan"),
             mean_n_checked=self.n_checked_sum / nq if nq else float("nan"),
+            n_state_hits=self.n_state_hits,
+            n_state_builds=self.n_state_builds,
+            n_state_restores=self.n_state_restores,
+            n_state_evictions=self.n_state_evictions,
         )
 
 
@@ -208,6 +249,13 @@ class Batcher:
     to front-load); ``step_cache.n_compiled`` counts distinct compiled
     shape signatures, which stays far below the group count on real plans
     — and stays pinned no matter which frontend drives the traffic.
+
+    Group states live in a budgeted ``StateCache``: under
+    ``cfg.max_resident_groups`` / ``cfg.device_budget_bytes`` the
+    least-recently-used groups are evicted (host-offloaded by default)
+    and transparently restored on their next launch, bit-exactly.  Cache
+    activity is mirrored into the per-group ``stats`` counters and
+    aggregated by ``cache_summary``.
     """
 
     def __init__(
@@ -232,7 +280,18 @@ class Batcher:
         self.cfg = cfg
         self.step_cache = QueryStepCache()
         self._group_cfgs: dict[int, IndexConfig] = {}
-        self._states: dict[int, object] = {}
+        self.state_cache = StateCache(
+            build=self._build_state,
+            nbytes_of=lambda gi: self.group_config(gi).state_nbytes,
+            max_resident_groups=cfg.max_resident_groups,
+            device_budget_bytes=cfg.device_budget_bytes,
+            offload=offload_state if cfg.offload_evicted else None,
+            restore=(
+                (lambda gi, host: restore_state(self.mesh, host))
+                if cfg.offload_evicted else None
+            ),
+            on_event=self._on_cache_event,
+        )
         self.stats: dict[int, GroupServeStats] = {
             gi: GroupServeStats() for gi in range(plan.n_groups)
         }
@@ -270,28 +329,85 @@ class Batcher:
             self._group_cfgs[gi] = cfg
         return cfg
 
-    def _group(self, gi: int):
-        cfg = self.group_config(gi)
-        state = self._states.get(gi)
-        if state is None:
-            state = build_group_state(
-                self.mesh, cfg, self.points, self.plan.groups[gi]
-            )
-            self._states[gi] = state
-        return cfg, state, self.step_cache.get(self.mesh, cfg)
+    def _build_state(self, gi: int):
+        """Cold-path StateCache builder: materialize group ``gi`` on device."""
+        return build_group_state(
+            self.mesh, self.group_config(gi), self.points,
+            self.plan.groups[gi],
+        )
+
+    def _on_cache_event(self, gi: int, kind: str) -> None:
+        """Mirror one StateCache event into the group's serving stats."""
+        st = self.stats[gi]
+        if kind == "hit":
+            st.n_state_hits += 1
+        elif kind == "build":
+            st.n_state_builds += 1
+        elif kind == "restore":
+            st.n_state_restores += 1
+        elif kind == "evict":
+            st.n_state_evictions += 1
 
     def warmup(self, groups=None) -> None:
-        """Build states and compile steps ahead of traffic."""
-        for gi in groups if groups is not None else range(self.plan.n_groups):
-            self._group(int(gi))
+        """Build states and compile steps ahead of traffic.
+
+        Under a residency budget (default offload mode) the
+        earliest-built states are evicted to host as later ones land,
+        leaving the tail resident and the rest warm for restore — first
+        traffic to any group then pays one upload, never a rebuild.  In
+        discard mode (``offload_evicted=False``) evicted builds would be
+        pure waste, so only the budget-fitting tail is prebuilt; the
+        rest build on first traffic.
+        """
+        gids = [
+            int(gi) for gi in
+            (groups if groups is not None else range(self.plan.n_groups))
+        ]
+        for gi in gids:
+            self.step_cache.get(self.mesh, self.group_config(gi))
+        if not self.cfg.offload_evicted:
+            gids = self._budget_fitting_tail(gids)
+        for gi in gids:
+            with self.state_cache.lease(gi):
+                pass
+
+    def _budget_fitting_tail(self, gids: list[int]) -> list[int]:
+        """Longest suffix of ``gids`` that fits the residency budget."""
+        cap = self.cfg.max_resident_groups
+        budget = self.cfg.device_budget_bytes
+        keep: list[int] = []
+        nbytes = 0
+        for gi in reversed(gids):
+            nb = self.group_config(gi).state_nbytes
+            if cap is not None and len(keep) + 1 > cap:
+                break
+            if budget is not None and nbytes + nb > budget:
+                break
+            keep.append(gi)
+            nbytes += nb
+        return list(reversed(keep))
 
     def reset_stats(self) -> None:
+        """Zero every per-group counter and the aggregate cache counters."""
         for gi in self.stats:
             self.stats[gi] = GroupServeStats()
+        self.state_cache.reset_stats()
 
     def stats_summary(self) -> dict[int, dict]:
+        """Per-group summaries for groups that served at least one batch."""
         return {gi: s.summary() for gi, s in self.stats.items()
                 if s.n_batches}
+
+    def cache_summary(self) -> dict:
+        """Aggregate state-paging report (counters + current residency)."""
+        return dict(
+            **self.state_cache.stats.summary(),
+            n_resident=self.state_cache.n_resident,
+            n_groups=self.plan.n_groups,
+            resident_bytes=self.state_cache.resident_bytes,
+            max_resident_groups=self.cfg.max_resident_groups,
+            device_budget_bytes=self.cfg.device_budget_bytes,
+        )
 
     def mean_occupancy(self) -> float:
         """Unweighted mean batch occupancy over groups that served traffic."""
@@ -334,31 +450,42 @@ class Batcher:
         returns ``(ids, dists, stop_levels, n_checked)`` sliced back to the
         real rows.  Both frontends answer every query through this method,
         which is what makes them bit-exact on identical traffic.
+
+        The group's state is leased from the ``StateCache`` around the
+        launch: pinned (unevictable) while the compiled step runs, then
+        released, so a budgeted cache can page any group between launches
+        but never under one.
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
-        cfg, state, step = self._group(gi)
+        cfg = self.group_config(gi)
+        step = self.step_cache.get(self.mesh, cfg)
         real = len(queries)
         take = pad_take(real, cfg.q_batch)
         g = self.plan.groups[gi]
         qtake = queries[take]
         wtake = weight_ids[take]
         slots = self.plan.member_slot[wtake]
-        codes = self._encode(gi, cfg, state, queries, take).astype(np.int32)
-        d_b, i_b, stop_b, chk_b = step(
-            state,
-            jnp.asarray(qtake),
-            jnp.asarray(codes),
-            jnp.asarray(self.plan.weights[wtake].astype(np.float32)),
-            jnp.asarray(g.mu_members[slots].astype(np.int32)),
-            jnp.asarray(g.r_min_members[slots].astype(np.float32)),
-            jnp.asarray(g.beta_members[slots].astype(np.int32)),
-            jnp.asarray(g.n_levels_members[slots].astype(np.int32)),
-        )
-        ids = np.asarray(i_b)[:real]
-        dists = np.asarray(d_b)[:real]
-        stop = np.asarray(stop_b)[:real]
-        chk = np.asarray(chk_b)[:real]
+        with self.state_cache.lease(gi) as state:
+            codes = self._encode(
+                gi, cfg, state, queries, take
+            ).astype(np.int32)
+            d_b, i_b, stop_b, chk_b = step(
+                state,
+                jnp.asarray(qtake),
+                jnp.asarray(codes),
+                jnp.asarray(self.plan.weights[wtake].astype(np.float32)),
+                jnp.asarray(g.mu_members[slots].astype(np.int32)),
+                jnp.asarray(g.r_min_members[slots].astype(np.float32)),
+                jnp.asarray(g.beta_members[slots].astype(np.int32)),
+                jnp.asarray(g.n_levels_members[slots].astype(np.int32)),
+            )
+            # materialize before releasing the lease: the state must stay
+            # resident until the device has finished reading it
+            ids = np.asarray(i_b)[:real]
+            dists = np.asarray(d_b)[:real]
+            stop = np.asarray(stop_b)[:real]
+            chk = np.asarray(chk_b)[:real]
         st = self.stats[gi]
         st.n_batches += 1
         st.n_queries += real

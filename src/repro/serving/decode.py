@@ -20,6 +20,8 @@ __all__ = ["SamplerConfig", "make_serve_step", "generate"]
 
 @dataclasses.dataclass(frozen=True)
 class SamplerConfig:
+    """Host-side sampling knobs for the generation loop."""
+
     temperature: float = 1.0
     top_k: int = 0  # 0 = full softmax
     seed: int = 0
@@ -27,7 +29,6 @@ class SamplerConfig:
 
 def make_serve_step(model):
     """jit'd (params, cache, tokens (B,), position) -> (logits, cache)."""
-
     def step(params, cache, tokens, position):
         return model.decode_step(params, cache, tokens, position)
 

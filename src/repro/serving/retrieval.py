@@ -66,8 +66,11 @@ class RetrievalService:
     States and compiled steps are built lazily per group (call ``warmup``
     to front-load); ``step_cache.n_compiled`` counts distinct compiled
     shape signatures, which stays far below the group count on real plans.
-    Pass the service (or its ``batcher``) to ``AsyncRetrievalService`` to
-    serve streaming traffic over the same states, stats and step cache.
+    Under ``ServiceConfig.max_resident_groups`` / ``device_budget_bytes``
+    the per-group device states are additionally paged by a ``StateCache``
+    (LRU eviction + host offload), bit-exactly.  Pass the service (or its
+    ``batcher``) to ``AsyncRetrievalService`` to serve streaming traffic
+    over the same states, stats and step cache.
     """
 
     def __init__(
@@ -83,26 +86,37 @@ class RetrievalService:
 
     @property
     def plan(self) -> ServingPlan:
+        """The ServingPlan this service answers under."""
         return self.batcher.plan
 
     @property
     def points(self) -> np.ndarray:
+        """The (n, d) host corpus the group states are built from."""
         return self.batcher.points
 
     @property
     def mesh(self):
+        """The device mesh group states and compiled steps live on."""
         return self.batcher.mesh
 
     @property
     def cfg(self) -> ServiceConfig:
+        """Serving-side configuration (shared with the batching core)."""
         return self.batcher.cfg
 
     @property
     def step_cache(self):
+        """Compiled-step cache, shared across groups and frontends."""
         return self.batcher.step_cache
 
     @property
+    def state_cache(self):
+        """Budgeted per-group device-state cache (see ``StateCache``)."""
+        return self.batcher.state_cache
+
+    @property
     def stats(self) -> dict[int, GroupServeStats]:
+        """Per-group serving counters, keyed by group id."""
         return self.batcher.stats
 
     def group_config(self, gi: int):
@@ -114,10 +128,16 @@ class RetrievalService:
         self.batcher.warmup(groups)
 
     def reset_stats(self) -> None:
+        """Zero the per-group serving counters and cache counters."""
         self.batcher.reset_stats()
 
     def stats_summary(self) -> dict[int, dict]:
+        """Per-group summaries for groups that served at least one batch."""
         return self.batcher.stats_summary()
+
+    def cache_summary(self) -> dict:
+        """Aggregate state-paging report (counters + current residency)."""
+        return self.batcher.cache_summary()
 
     def mean_occupancy(self) -> float:
         """Unweighted mean batch occupancy over groups that served traffic."""

@@ -1,0 +1,289 @@
+"""Group-state memory manager: lazy build, LRU eviction, host offload.
+
+WLSH's planner (Algorithm 1) deliberately produces *many* table groups to
+cover the weight set, and each group's device state — codes ``(n, beta)``
+plus vectors ``(n, d)`` — dominates the serving footprint.  Keeping every
+``build_group_state`` result resident forever caps scale at
+``device_bytes / state_nbytes`` groups, far below a production plan.  The
+``StateCache`` bounds residency under an explicit budget instead:
+
+  build     a group's state is built on first acquire (cold miss)
+  evict     before a miss materializes a new state, least-recently-used
+            *unpinned* groups are evicted until the incoming state fits
+            ``max_resident_groups`` / ``device_budget_bytes`` (its size
+            is known up front, so the budget holds at peak residency);
+            with an ``offload`` hook the evicted state is pulled to host
+            memory first, otherwise it is discarded
+  restore   re-acquiring an offloaded group uploads the host copy (warm
+            miss: one host-to-device copy, bit-identical bytes, no
+            re-encode and no recompile)
+  pin       an acquired state is pinned until ``release`` — a launch in
+            flight can never lose its state to a concurrent acquire, and
+            deadline-driven partial launches cannot thrash each other
+
+Byte accounting comes from ``IndexConfig.state_nbytes`` (the *padded*
+shapes actually materialized), so budgets are enforceable before any state
+is built.  Counters (hits / builds / restores / evictions) feed
+``Batcher.stats`` and the serve_bench paging sweep.  Compiled query steps
+are deliberately *not* managed here: ``QueryStepCache`` keys on shape
+signatures, so evicting a group's state never forces a recompile.
+
+The cache is single-threaded like the frontends that drive it; the budget
+is soft under pinning — if every resident state is pinned, an acquire may
+temporarily exceed the budget rather than deadlock.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import OrderedDict
+from typing import Callable
+
+__all__ = ["CacheStats", "StateCache"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Running cache counters (reset with ``StateCache.reset_stats``)."""
+
+    n_hits: int = 0  # acquire found the state resident
+    n_builds: int = 0  # cold miss: state built from scratch
+    n_restores: int = 0  # warm miss: host copy uploaded
+    n_evictions: int = 0  # device evictions (offloaded or discarded)
+
+    @property
+    def n_misses(self) -> int:
+        """Acquires that had to build or restore."""
+        return self.n_builds + self.n_restores
+
+    @property
+    def hit_rate(self) -> float:
+        """Resident-hit fraction over all acquires (nan with no traffic)."""
+        total = self.n_hits + self.n_misses
+        return self.n_hits / total if total else float("nan")
+
+    def summary(self) -> dict:
+        """Flat dict of every counter plus the derived hit rate."""
+        return dict(
+            n_hits=self.n_hits,
+            n_builds=self.n_builds,
+            n_restores=self.n_restores,
+            n_evictions=self.n_evictions,
+            hit_rate=self.hit_rate,
+        )
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One group's cache slot: at most one of state/host is populated."""
+
+    state: object | None = None  # device-resident QueryState
+    host: object | None = None  # offloaded host copy
+    nbytes: int = 0
+    pins: int = 0
+
+
+class StateCache:
+    """LRU cache of per-group device states under a device-memory budget.
+
+    Parameters
+    ----------
+    build:
+        ``build(group_id) -> state`` — materialize a group's device state
+        from scratch (cold path).
+    nbytes_of:
+        ``nbytes_of(group_id) -> int`` — the group's device footprint,
+        derivable without building (``IndexConfig.state_nbytes``).
+    max_resident_groups:
+        Keep at most this many groups resident (None = unbounded).
+    device_budget_bytes:
+        Keep total resident bytes at or under this budget (None =
+        unbounded).  Both limits may be set; eviction enforces both.
+    offload:
+        Optional ``offload(state) -> host_copy`` run at eviction; evicted
+        groups restore from the copy instead of rebuilding.  None
+        discards evicted states (rebuild on next acquire).
+    restore:
+        ``restore(group_id, host_copy) -> state`` — upload an offloaded
+        copy.  Required when ``offload`` is set.
+    on_event:
+        Optional ``on_event(group_id, kind)`` observer with kind in
+        ``{"hit", "build", "restore", "evict"}`` — the hook ``Batcher``
+        uses to mirror cache activity into its per-group serving stats.
+    """
+
+    def __init__(
+        self,
+        build: Callable[[int], object],
+        nbytes_of: Callable[[int], int],
+        *,
+        max_resident_groups: int | None = None,
+        device_budget_bytes: int | None = None,
+        offload: Callable[[object], object] | None = None,
+        restore: Callable[[int, object], object] | None = None,
+        on_event: Callable[[int, str], None] | None = None,
+    ):
+        if max_resident_groups is not None and max_resident_groups < 1:
+            raise ValueError(
+                f"max_resident_groups must be >= 1 or None, got "
+                f"{max_resident_groups}"
+            )
+        if device_budget_bytes is not None and device_budget_bytes < 1:
+            raise ValueError(
+                f"device_budget_bytes must be >= 1 or None, got "
+                f"{device_budget_bytes}"
+            )
+        if offload is not None and restore is None:
+            raise ValueError("offload requires a restore callable")
+        self._build = build
+        self._nbytes_of = nbytes_of
+        self.max_resident_groups = max_resident_groups
+        self.device_budget_bytes = device_budget_bytes
+        self._offload = offload
+        self._restore = restore
+        self._on_event = on_event or (lambda gi, kind: None)
+        # LRU order: first = least recently used.  Non-resident entries
+        # (host copy only) live in _offloaded.
+        self._resident: OrderedDict[int, _Entry] = OrderedDict()
+        self._resident_nbytes = 0  # running sum over self._resident
+        self._offloaded: dict[int, _Entry] = {}
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------- inspection
+
+    @property
+    def resident_bytes(self) -> int:
+        """Total accounted bytes of the currently resident states."""
+        return self._resident_nbytes
+
+    @property
+    def n_resident(self) -> int:
+        """Number of groups currently resident on device."""
+        return len(self._resident)
+
+    def resident_group_ids(self) -> tuple[int, ...]:
+        """Resident groups, least recently used first."""
+        return tuple(self._resident)
+
+    def is_resident(self, gi: int) -> bool:
+        """Whether group ``gi`` is on device right now."""
+        return gi in self._resident
+
+    def pin_count(self, gi: int) -> int:
+        """Outstanding acquires of group ``gi`` (0 = evictable)."""
+        entry = self._resident.get(int(gi))
+        return entry.pins if entry is not None else 0
+
+    def reset_stats(self) -> None:
+        """Zero the hit/build/restore/eviction counters."""
+        self.stats = CacheStats()
+
+    # ---------------------------------------------------------------- serving
+
+    def acquire(self, gi: int) -> object:
+        """Return group ``gi``'s device state, pinned until ``release``.
+
+        Resident: a hit (refreshes LRU position).  Offloaded: the host
+        copy is uploaded (restore).  Unknown: built from scratch.  On
+        either miss path, least-recently-used unpinned groups are evicted
+        *before* the new state materializes (its size is known up front
+        from ``nbytes_of``), so the budget holds at the moment of peak
+        residency — never exceeded transiently by the incoming group.
+        """
+        gi = int(gi)
+        entry = self._resident.get(gi)
+        if entry is not None:
+            self._resident.move_to_end(gi)
+            entry.pins += 1
+            self.stats.n_hits += 1
+            self._on_event(gi, "hit")
+            return entry.state
+        entry = self._offloaded.get(gi)
+        nbytes = entry.nbytes if entry is not None else self._nbytes_of(gi)
+        self._evict_to_fit(nbytes)
+        if entry is not None:
+            # restore before popping: if the upload raises (device OOM —
+            # the regime paging exists for), the host copy survives and a
+            # retry restores instead of silently cold-rebuilding
+            entry.state = self._restore(gi, entry.host)
+            del self._offloaded[gi]
+            entry.host = None
+            self.stats.n_restores += 1
+            kind = "restore"
+        else:
+            entry = _Entry(state=self._build(gi), nbytes=nbytes)
+            self.stats.n_builds += 1
+            kind = "build"
+        entry.pins += 1
+        self._resident[gi] = entry  # newest LRU position
+        self._resident_nbytes += entry.nbytes
+        self._on_event(gi, kind)
+        return entry.state
+
+    def release(self, gi: int) -> None:
+        """Unpin one ``acquire`` of group ``gi`` (making it evictable)."""
+        entry = self._resident.get(int(gi))
+        if entry is None or entry.pins < 1:
+            raise ValueError(f"release without matching acquire (group {gi})")
+        entry.pins -= 1
+        self._enforce_budget()
+
+    @contextlib.contextmanager
+    def lease(self, gi: int):
+        """Context-managed acquire/release pair around one launch."""
+        state = self.acquire(gi)
+        try:
+            yield state
+        finally:
+            self.release(gi)
+
+    # --------------------------------------------------------------- eviction
+
+    def _over_budget(self, incoming_groups: int = 0,
+                     incoming_bytes: int = 0) -> bool:
+        if self.max_resident_groups is not None and (
+            len(self._resident) + incoming_groups > self.max_resident_groups
+        ):
+            return True
+        return self.device_budget_bytes is not None and (
+            self.resident_bytes + incoming_bytes > self.device_budget_bytes
+        )
+
+    def _evict_lru_while(self, over) -> None:
+        while over():
+            victim = next(
+                (gi for gi, e in self._resident.items() if e.pins == 0), None
+            )
+            if victim is None:  # everything pinned: soft budget, no deadlock
+                return
+            self.evict(victim)
+
+    def _evict_to_fit(self, nbytes: int) -> None:
+        """Make room for one incoming ``nbytes``-sized state up front."""
+        self._evict_lru_while(lambda: self._over_budget(1, nbytes))
+
+    def _enforce_budget(self) -> None:
+        self._evict_lru_while(self._over_budget)
+
+    def evict(self, gi: int) -> None:
+        """Evict group ``gi`` from device (offloading first if configured)."""
+        gi = int(gi)
+        entry = self._resident.get(gi)
+        if entry is None:
+            return
+        if entry.pins:
+            raise ValueError(f"cannot evict pinned group {gi}")
+        del self._resident[gi]
+        self._resident_nbytes -= entry.nbytes
+        if self._offload is not None:
+            entry.host = self._offload(entry.state)
+            self._offloaded[gi] = entry
+        entry.state = None  # drop the device reference either way
+        self.stats.n_evictions += 1
+        self._on_event(gi, "evict")
+
+    def clear(self) -> None:
+        """Drop every unpinned resident state (keeping host copies)."""
+        for gi in [g for g, e in self._resident.items() if e.pins == 0]:
+            self.evict(gi)

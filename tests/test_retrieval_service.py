@@ -166,6 +166,46 @@ def test_plan_npz_roundtrip(tmp_path, setup):
     np.testing.assert_array_equal(r1.dists, r2.dists)
 
 
+def test_plan_npz_roundtrip_preserves_dtypes_exactly(tmp_path, setup):
+    """Regression guard for the offload/restore path: every array of a
+    saved-and-reloaded ServingPlan must keep its exact dtype and bytes
+    (r_min stays f64, codes stay i32, ...), scalars their python types,
+    and optional host codes must round-trip both present and absent."""
+    import dataclasses
+
+    data, weights, host, plan, svc = setup
+    path = str(tmp_path / "plan_dtypes.npz")
+    plan.save_npz(path)
+    plan2 = ServingPlan.load_npz(path)
+    for f in ("weights", "group_of", "member_slot"):
+        a, b = getattr(plan, f), getattr(plan2, f)
+        assert a.dtype == b.dtype, f"plan.{f} dtype drifted"
+        np.testing.assert_array_equal(a, b)
+    for f in ("n", "d", "c"):
+        assert isinstance(getattr(plan2, f), int)
+    for f in ("p", "gamma_n", "tau"):
+        assert isinstance(getattr(plan2, f), float)
+        assert getattr(plan2, f) == getattr(plan, f)
+    for g, g2 in zip(plan.groups, plan2.groups):
+        for fld in dataclasses.fields(g):
+            a, b = getattr(g, fld.name), getattr(g2, fld.name)
+            if isinstance(a, np.ndarray):
+                assert a.dtype == b.dtype, (
+                    f"group.{fld.name} dtype drifted: {a.dtype} -> {b.dtype}"
+                )
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"group.{fld.name} values drifted"
+                )
+            else:
+                assert type(a) is type(b) and a == b, f"group.{fld.name}"
+    # optional host codes absent: stays absent through the round-trip
+    plan_nc = host.export_serving_plan(include_codes=False)
+    path_nc = str(tmp_path / "plan_nocodes.npz")
+    plan_nc.save_npz(path_nc)
+    plan_nc2 = ServingPlan.load_npz(path_nc)
+    assert all(g.codes is None for g in plan_nc2.groups)
+
+
 def test_plan_without_codes_serves_via_device_encoding(setup):
     """include_codes=False: data codes are built on device (f32), so query
     codes must come from the same encoding — the service falls back from
