@@ -21,6 +21,12 @@ pins a baseline for that path:
            StateCache capped at a shrinking resident fraction of the
            plan's groups (1.0 -> 0.25) — throughput and state hit-rate
            vs device-memory budget, answers bit-exact throughout
+  sweep 5  streaming writes: the same traffic with a growing fraction of
+           ops replaced by streaming inserts (write mix 0 -> 50%) at a
+           fixed paging budget — query throughput and p50 latency vs
+           insert rate, fresh-insert recall via the exact delta scan,
+           then a full compaction absorbs the backlog with zero
+           query-step recompiles
 
 Validation checks assert the structural claims future PRs must not regress:
 compiled steps stay below group count (shape-bucket sharing), full batches
@@ -209,6 +215,88 @@ def run(full: bool = False) -> dict:
         rows_paging,
     )
 
+    # ---- sweep 5: streaming — query throughput / p50 latency vs write mix ---
+    # mixed op stream at a fixed paging budget (cap = half the groups);
+    # queries go out in stream-order chunks of up to Q_BATCH, inserts land
+    # in the delta memtables (seals allowed, compaction deferred so the
+    # mid-stream read path is delta-scan + merge); after the stream a full
+    # compaction absorbs the backlog and the insert recall is re-checked
+    # through the compiled index path
+    rows_stream = []
+    stream_exact = True
+    stream_recall = True
+    stream_no_recompile = True
+    cap5 = max(1, plan.n_groups // 2)
+    qpts, wids = _traffic(data, pool, n_queries, rng)
+    base_ref = svc.query(qpts, wids)  # static reference answers
+    for mix in (0.0, 0.1, 0.25, 0.5):
+        srng = np.random.default_rng(int(mix * 100) + 17)
+        ssvc = RetrievalService(
+            plan, data,
+            cfg=ServiceConfig(k=K, q_batch=Q_BATCH, use_pallas=False,
+                              max_resident_groups=cap5,
+                              delta_seal_rows=16,
+                              delta_reserve_rows=n_queries),
+        )
+        ssvc.warmup()
+        ssvc.reset_stats()
+        n_compiled0 = ssvc.step_cache.n_compiled
+        is_ins = srng.random(n_queries) < mix
+        ins_vecs = qpts + np.float32(60_000.0) + np.float32(7.0) * (
+            np.arange(n_queries, dtype=np.float32)[:, None]
+        )
+        inserted = []
+        got_ids = {}
+        lat_s = []
+        with Timer() as t:
+            i = 0
+            while i < n_queries:
+                if is_ins[i]:
+                    pid = ssvc.insert(ins_vecs[i], int(wids[i]))
+                    inserted.append((pid, i))
+                    i += 1
+                    continue
+                lo = i  # stream-order chunk of consecutive reads
+                while (i < n_queries and not is_ins[i]
+                       and i - lo < Q_BATCH):
+                    i += 1
+                with Timer() as tq:
+                    r = ssvc.query(qpts[lo:i], wids[lo:i])
+                lat_s.extend([tq.seconds / (i - lo)] * (i - lo))
+                for row, qi in enumerate(range(lo, i)):
+                    got_ids[qi] = r.ids[row]
+        n_reads = len(lat_s)
+        # mid-stream reads bit-exact vs the static reference (inserts are
+        # far offsets, so base top-k answers must be untouched)
+        for qi, ids in got_ids.items():
+            stream_exact &= bool(np.array_equal(ids, base_ref.ids[qi]))
+        # fresh-insert recall through the exact delta scan
+        for pid, qi in inserted:
+            r = ssvc.query(ins_vecs[qi][None], [int(wids[qi])])
+            stream_recall &= int(r.ids[0][0]) == pid
+        absorbed = ssvc.compact()
+        # ... and through the compiled index path after compaction
+        for pid, qi in inserted:
+            r = ssvc.query(ins_vecs[qi][None], [int(wids[qi])])
+            stream_recall &= int(r.ids[0][0]) == pid
+        stream_no_recompile &= (
+            ssvc.step_cache.n_compiled == n_compiled0
+        )
+        d = ssvc.delta_summary() or dict(n_seals=0, n_compactions=0)
+        rows_stream.append([
+            mix, n_reads, len(inserted),
+            (n_reads / t.seconds) if n_reads else 0.0,
+            1e3 * float(np.percentile(lat_s, 50)) if lat_s else 0.0,
+            d["n_seals"], d["n_compactions"], absorbed,
+        ])
+    print_table(
+        "streaming writes: query throughput / p50 latency vs write mix "
+        f"(paging cap {cap5}/{plan.n_groups} groups)",
+        ["write mix", "reads", "inserts", "read q/s", "p50 read ms",
+         "seals", "compactions", "rows compacted"],
+        rows_stream,
+    )
+
     qps_full = rows_occ[-1][2]
     qps_single = rows_occ[0][2]
     occ_async_min = min(r[2] for r in rows_async)
@@ -259,6 +347,25 @@ def run(full: bool = False) -> dict:
                      "shrinks",
             "ok": bool(rows_paging[-1][4] < rows_paging[0][4]),
         },
+        {
+            "check": "mixed-stream reads bit-exact with the static "
+                     "reference at every write mix",
+            "ok": stream_exact,
+        },
+        {
+            "check": "fresh inserts recalled exactly, pre- and "
+                     "post-compaction, at every write mix",
+            "ok": stream_recall,
+        },
+        {
+            "check": "streaming (seal + compact) never recompiles a "
+                     "query step",
+            "ok": stream_no_recompile,
+        },
+        {
+            "check": "the 50% write mix seals and compacts a real backlog",
+            "ok": bool(rows_stream[-1][5] > 0 and rows_stream[-1][7] > 0),
+        },
     ]
     for v in validation:
         print(("PASS " if v["ok"] else "FAIL ") + v["check"])
@@ -283,6 +390,13 @@ def run(full: bool = False) -> dict:
             "qps", "state_hit_rate", "n_evictions", "n_restores",
             "n_rebuilds", "resident_bytes",
         ],
+        "streaming_sweep": rows_stream,
+        "streaming_sweep_columns": [
+            "write_mix", "n_reads", "n_inserts", "read_qps",
+            "p50_read_latency_ms", "n_seals", "n_compactions",
+            "n_rows_compacted",
+        ],
+        "streaming_paging_cap": cap5,
         "validation": validation,
     }
     save("serve_bench", payload)

@@ -117,18 +117,29 @@ class GroupServingPlan:
 
 @dataclasses.dataclass(frozen=True)
 class ServingPlan:
-    """Every group of a WLSH index, plus the weight -> group routing."""
+    """Every group of a WLSH index, plus the weight -> group routing.
+
+    ``version`` and ``corpus_epoch`` track the plan's streaming lineage:
+    a freshly exported plan is version 0 at epoch ``n``; every compaction
+    of delta segments into a group state bumps ``version`` and advances
+    ``corpus_epoch`` to the total number of rows ever absorbed into the
+    serving corpus (base rows plus compacted inserts).  The fields ride
+    through the npz round-trip, so a persisted plan records how far its
+    index has drifted from the base export.
+    """
 
     n: int  # data-set size the plan was derived for
     d: int
     p: float
     c: int
-    gamma_n: float  # gamma * n (query budget = k + ceil(gamma * n))
+    gamma_n: float  # gamma * n (query budget = k + ceil(gamma_n))
     tau: float
     weights: np.ndarray  # (|S|, d) float64 — the weight vector set S
     group_of: np.ndarray  # (|S|,) int64
     member_slot: np.ndarray  # (|S|,) int64
     groups: tuple[GroupServingPlan, ...]
+    version: int = 0  # bumped once per delta compaction
+    corpus_epoch: int = 0  # total rows absorbed (0 = base export, == n)
 
     @property
     def n_groups(self) -> int:
@@ -159,9 +170,25 @@ class ServingPlan:
             n_levels=int(g.n_levels_members[slot]),
         )
 
+    def bumped(self, n_absorbed: int) -> "ServingPlan":
+        """Copy of the plan after one compaction of ``n_absorbed`` rows.
+
+        ``version`` increments by one; ``corpus_epoch`` advances by the
+        absorbed row count (from ``n`` when the plan was still at its
+        base export).  The group parameters themselves are untouched —
+        compaction re-hashes with the original family seeds.
+        """
+        base = self.corpus_epoch if self.corpus_epoch else self.n
+        return dataclasses.replace(
+            self,
+            version=self.version + 1,
+            corpus_epoch=base + int(n_absorbed),
+        )
+
     # ------------------------------------------------------------- serialize
 
-    _META_FIELDS = ("n", "d", "p", "c", "gamma_n", "tau")
+    _META_FIELDS = ("n", "d", "p", "c", "gamma_n", "tau", "version",
+                    "corpus_epoch")
     _GROUP_SCALARS = (
         "group_id", "center_id", "beta_group", "width", "levels_cap", "p",
     )
@@ -222,4 +249,7 @@ class ServingPlan:
                 group_of=z["group_of"],
                 member_slot=z["member_slot"],
                 groups=tuple(groups),
+                # absent in archives written before the streaming layer
+                version=int(meta.get("version", 0)),
+                corpus_epoch=int(meta.get("corpus_epoch", 0)),
             )

@@ -191,6 +191,7 @@ class WLSHIndex:
             group_of=self.part.group_of.copy(),
             member_slot=self.part.member_slot.copy(),
             groups=tuple(groups),
+            corpus_epoch=self.n,
         )
 
     # ----------------------------------------------------------------- search
@@ -219,7 +220,7 @@ class WLSHIndex:
         n_levels = int(plan.n_levels[slot])
         c = int(round(self.cfg.c))
         n = self.n
-        budget = k + int(math.ceil(self.cfg.gamma * n))
+        budget = k + int(math.ceil(self.cfg.gamma_n))  # == gamma * n, float-exact
 
         q = np.asarray(q, dtype=np.float32)
         q_codes = hash_codes_np(q[None, :], built.fam)[0][:beta_i]
@@ -329,7 +330,7 @@ class WLSHIndex:
         n_levels = int(plan.n_levels[slot])
         c = int(round(self.cfg.c))
         n = self.n
-        budget = k + int(math.ceil(self.cfg.gamma * n))
+        budget = k + int(math.ceil(self.cfg.gamma_n))  # == gamma * n, float-exact
 
         q = np.asarray(q, dtype=np.float32)
         q_codes = hash_codes_np(q[None, :], built.fam)[0][:beta_i]

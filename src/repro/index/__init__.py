@@ -1,10 +1,13 @@
-"""Distributed WLSH index runtime: sharded build + group-aware query engine."""
+"""Distributed WLSH index runtime: sharded build + group-aware query engine,
+plus the streaming delta-segment primitives (append/seal/compact)."""
 
 from .builder import (
+    append_to_state,
     build_group_state,
     build_state,
     fold_center_weight,
     make_build_step,
+    seal_segment,
 )
 from .config import IndexConfig, pad_beta, pad_levels
 from .engine import (
@@ -14,18 +17,25 @@ from .engine import (
     make_query_step,
     query_input_specs,
 )
+from .streaming import DeltaSegment, SealedSegment, exact_weighted_lp, scan_topk
 
 __all__ = [
+    "DeltaSegment",
     "IndexConfig",
     "QueryState",
     "QueryStepCache",
+    "SealedSegment",
+    "append_to_state",
     "build_group_state",
     "build_state",
     "encode_queries",
+    "exact_weighted_lp",
     "fold_center_weight",
     "make_build_step",
     "make_query_step",
     "pad_beta",
     "pad_levels",
     "query_input_specs",
+    "scan_topk",
+    "seal_segment",
 ]

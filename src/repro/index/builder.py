@@ -24,9 +24,10 @@ from ..core.families import LpFamilyParams
 from ..core.serving_plan import GroupServingPlan
 from ..kernels import ops
 from .config import IndexConfig
-from .engine import QueryState, _point_axes
+from .engine import QueryState, _point_axes, encode_queries
 
 __all__ = [
+    "append_to_state",
     "fold_center_weight",
     "make_build_step",
     "build_state",
@@ -35,7 +36,15 @@ __all__ = [
     "restore_state",
     "pad_cols",
     "build_input_specs",
+    "seal_segment",
 ]
+
+# Row-capacity padding fill for host-code builds: a fixed sentinel code
+# (the same convention ops.py pads with) and zero vectors.  Dead rows are
+# masked out of the query step by ``QueryState.n_valid``, so the fill only
+# has to be deterministic — every build path over the same live rows must
+# produce bit-identical states.
+_PAD_CODE = np.iinfo(np.int32).max // 2
 
 
 def fold_center_weight(fam: LpFamilyParams) -> dict[str, np.ndarray]:
@@ -102,14 +111,15 @@ def build_state(
     )
     rep2 = NamedSharding(mesh, P(None, None))
     rep1 = NamedSharding(mesh, P(None))
+    rep0 = NamedSharding(mesh, P())
     return QueryState(
         codes=codes,
         points=vecs,
         proj=jax.device_put(jnp.asarray(folded["proj"]), rep2),
         b_int=jax.device_put(jnp.asarray(folded["b_int"]), rep1),
         b_frac=jax.device_put(jnp.asarray(folded["b_frac"]), rep1),
-        width=jax.device_put(jnp.asarray(1.0, jnp.float32),
-                             NamedSharding(mesh, P())),
+        width=jax.device_put(jnp.asarray(1.0, jnp.float32), rep0),
+        n_valid=jax.device_put(jnp.asarray(len(points), jnp.int32), rep0),
     )
 
 
@@ -123,6 +133,7 @@ def _state_shardings(mesh: Mesh) -> QueryState:
         b_int=NamedSharding(mesh, P(None)),
         b_frac=NamedSharding(mesh, P(None)),
         width=NamedSharding(mesh, P()),
+        n_valid=NamedSharding(mesh, P()),
     )
 
 
@@ -181,6 +192,9 @@ def build_group_state(
     cfg: IndexConfig,
     points: np.ndarray,
     gplan: GroupServingPlan,
+    *,
+    extra_points: np.ndarray | None = None,
+    extra_codes: np.ndarray | None = None,
 ) -> QueryState:
     """Materialize one table group's QueryState from its serving plan.
 
@@ -189,6 +203,19 @@ def build_group_state(
     the plan ships host-computed codes they are placed directly (bit-exact
     candidate sets vs the host oracle); otherwise the codes are built on
     device through the sharded encode.
+
+    Streaming extensions:
+
+    * ``cfg.n`` is a row *capacity* and may exceed the live row count;
+      excess rows are deterministic dead weight (sentinel codes / zero
+      vectors on the host-code path, encoded zero vectors on the device
+      path) masked out of every query by ``QueryState.n_valid``.
+    * ``extra_points`` appends already-compacted streaming rows after the
+      base corpus (the cold-rebuild path for a group that has absorbed
+      delta segments); ``extra_codes`` carries their sealed hash codes on
+      the host-code path (``seal_segment`` output, already at ``cfg.beta``
+      columns).  The result is bit-exact with a state that reached the
+      same rows through ``append_to_state``.
     """
     folded = gplan.folded()
     proj = pad_cols(folded["proj"], cfg.beta)
@@ -198,15 +225,52 @@ def build_group_state(
     rows = NamedSharding(mesh, P(pa, None))
     rep2 = NamedSharding(mesh, P(None, None))
     rep1 = NamedSharding(mesh, P(None))
+    rep0 = NamedSharding(mesh, P())
+
+    points = np.ascontiguousarray(points, dtype=np.float32)
+    if extra_points is not None and len(extra_points):
+        extra_points = np.ascontiguousarray(extra_points, dtype=np.float32)
+        points = np.concatenate([points, extra_points], axis=0)
+    n_rows = len(points)
+    if n_rows > cfg.n:
+        raise ValueError(
+            f"{n_rows} live rows exceed the config row capacity {cfg.n}"
+        )
+    pad_rows = cfg.n - n_rows
 
     if gplan.codes is not None:
-        codes = jax.device_put(
-            jnp.asarray(pad_cols(gplan.codes, cfg.beta), jnp.int32), rows
-        )
+        codes_np = pad_cols(gplan.codes, cfg.beta).astype(np.int32)
+        if extra_codes is not None and len(extra_codes):
+            if extra_codes.shape[1] != cfg.beta:
+                raise ValueError(
+                    f"extra_codes must be sealed at cfg.beta={cfg.beta} "
+                    f"columns, got {extra_codes.shape[1]}"
+                )
+            codes_np = np.concatenate(
+                [codes_np, extra_codes.astype(np.int32)], axis=0
+            )
+        if len(codes_np) != n_rows:
+            raise ValueError(
+                f"host codes cover {len(codes_np)} rows, expected {n_rows} "
+                f"(pass extra_codes alongside extra_points)"
+            )
+        if pad_rows:
+            codes_np = np.concatenate([
+                codes_np,
+                np.full((pad_rows, cfg.beta), _PAD_CODE, np.int32),
+            ], axis=0)
+            points = np.concatenate([
+                points, np.zeros((pad_rows, cfg.d), np.float32)
+            ], axis=0)
+        codes = jax.device_put(jnp.asarray(codes_np, jnp.int32), rows)
         vecs = jax.device_put(
             jnp.asarray(points).astype(jnp.dtype(cfg.vec_dtype)), rows
         )
     else:
+        if pad_rows:
+            points = np.concatenate([
+                points, np.zeros((pad_rows, cfg.d), np.float32)
+            ], axis=0)
         step = make_build_step(mesh, cfg)
         codes, vecs = step(
             jnp.asarray(points, jnp.float32),
@@ -220,6 +284,79 @@ def build_group_state(
         proj=jax.device_put(jnp.asarray(proj), rep2),
         b_int=jax.device_put(jnp.asarray(b_int), rep1),
         b_frac=jax.device_put(jnp.asarray(b_frac), rep1),
-        width=jax.device_put(jnp.asarray(1.0, jnp.float32),
-                             NamedSharding(mesh, P())),
+        width=jax.device_put(jnp.asarray(1.0, jnp.float32), rep0),
+        n_valid=jax.device_put(jnp.asarray(n_rows, jnp.int32), rep0),
+    )
+
+
+def seal_segment(
+    cfg: IndexConfig,
+    gplan: GroupServingPlan,
+    vectors: np.ndarray,
+    state: QueryState | None = None,
+) -> np.ndarray:
+    """Hash a delta segment into ``(m, cfg.beta)`` int32 bucket codes.
+
+    Re-hashes the segment's rows with the group's *original* family seeds,
+    through the same encoding the group's data codes used: the host f64
+    path when the plan ships host codes (bit-exact with a fresh host build
+    over the union corpus), otherwise the device f32 path via the state's
+    folded projection (``state`` required).  Sealed codes are what
+    ``append_to_state`` later splices into the main group state — the
+    hashing work of compaction happens here, at seal time.
+    """
+    vectors = np.ascontiguousarray(np.atleast_2d(vectors), np.float32)
+    if gplan.codes is not None:
+        return pad_cols(
+            gplan.encode_host(vectors), cfg.beta
+        ).astype(np.int32)
+    if state is None:
+        raise ValueError(
+            "sealing without plan host codes requires the group's device "
+            "state for the f32 encode"
+        )
+    return np.asarray(encode_queries(state, vectors), np.int32)
+
+
+def append_to_state(
+    state: QueryState,
+    codes: np.ndarray,
+    vectors: np.ndarray,
+    mesh: Mesh | None = None,
+) -> QueryState:
+    """Splice sealed rows into a group state's reserved capacity.
+
+    Writes ``m`` new rows at ``state.n_valid`` and returns a state with
+    ``n_valid`` advanced — codes/vector buffers keep their compiled
+    (capacity) shapes, so the compaction that calls this never triggers a
+    query-step recompile.  The update is functional (the input state stays
+    valid; the transient extra copy of one group is the compaction cost);
+    with ``mesh`` the result is re-placed onto the build-time shardings.
+    Bit-exact with ``build_group_state`` over the union corpus at the same
+    capacity.
+    """
+    m = len(codes)
+    if m != len(vectors):
+        raise ValueError(f"codes/vectors row mismatch: {m} vs {len(vectors)}")
+    off = int(state.n_valid)
+    cap = state.codes.shape[0]
+    if off + m > cap:
+        raise ValueError(
+            f"append of {m} rows at {off} exceeds row capacity {cap} "
+            f"(raise ServiceConfig.delta_reserve_rows)"
+        )
+    codes_d = jnp.asarray(np.ascontiguousarray(codes, np.int32))
+    vecs_d = jnp.asarray(
+        np.ascontiguousarray(vectors, np.float32)
+    ).astype(state.points.dtype)
+    new_codes = jax.lax.dynamic_update_slice(state.codes, codes_d, (off, 0))
+    new_points = jax.lax.dynamic_update_slice(state.points, vecs_d, (off, 0))
+    n_valid = jnp.asarray(off + m, jnp.int32)
+    if mesh is not None:
+        sh = _state_shardings(mesh)
+        new_codes = jax.device_put(new_codes, sh.codes)
+        new_points = jax.device_put(new_points, sh.points)
+        n_valid = jax.device_put(n_valid, sh.n_valid)
+    return dataclasses.replace(
+        state, codes=new_codes, points=new_points, n_valid=n_valid
     )

@@ -60,7 +60,8 @@ class IndexConfig:
     TPU pod: ~1B points, SIFT-like d, beta from Eq. 11 at n=2^30.
     """
 
-    n: int = 1 << 30  # points (global)
+    n: int = 1 << 30  # row capacity (global); streaming builds may reserve
+    # capacity above the live row count — state.n_valid masks the tail
     d: int = 128  # dimensions
     beta: int = 128  # hash tables in the group (post-relaxation size)
     q_batch: int = 64  # global query batch
@@ -80,6 +81,10 @@ class IndexConfig:
     # is the practical choice — set it here instead of re-deriving gamma.
     vec_dtype: str = "bfloat16"  # stored vectors (verification re-ranks in f32)
     use_pallas: bool | None = None  # None = auto (TPU only)
+    delta_seal_rows: int = 1024  # streaming: an open delta memtable seals
+    # into a hashed segment at this row count; not compile-relevant (absent
+    # from shape_signature), but part of dataclass equality, so a Batcher
+    # threads one uniform value through every group config
     analysis_unroll: bool = False  # unroll block/level loops so the dry-run
     # cost analysis counts true work (XLA counts loop bodies once); used by
     # launch/dryrun.py shallow analysis lowerings only
@@ -90,10 +95,17 @@ class IndexConfig:
 
     @property
     def budget(self) -> int:
-        """Candidate budget k + ceil(gamma * n) (paper stop condition 2)."""
+        """Candidate budget k + ceil(gamma * n) (paper stop condition 2).
+
+        Computed as ``k + ceil(gamma_n)`` directly: ``gamma * n`` is
+        ``gamma_n`` by definition, and the direct form keeps the budget
+        exact (and independent of row-capacity padding) where the float
+        round-trip ``gamma_n / n * n`` could land on either side of the
+        integer.  The host planner computes the same quantity.
+        """
         if self.budget_override is not None:
             return self.budget_override
-        return self.k + int(math.ceil(self.gamma * self.n))
+        return self.k + int(math.ceil(self.gamma_n))
 
     @property
     def state_nbytes(self) -> int:
@@ -102,14 +114,15 @@ class IndexConfig:
         Accounts every array of the padded state — codes ``(n, beta)`` i32,
         vectors ``(n, d)`` in ``vec_dtype``, the folded family
         (``proj (d, beta)`` f32, ``b_int``/``b_frac (beta,)``, ``width ()``)
-        — so the serving ``StateCache`` can budget residency before a group
-        is ever built.  Uses the *padded* beta/n_levels shapes (what is
-        actually materialized), not the group's raw table count.
+        plus the ``n_valid ()`` row-count scalar — so the serving
+        ``StateCache`` can budget residency before a group is ever built.
+        Uses the *padded* beta/n_levels/row-capacity shapes (what is
+        actually materialized), not the group's raw table or row count.
         """
         vec_itemsize = _dtype_itemsize(self.vec_dtype)
         per_point = self.beta * 4 + self.d * vec_itemsize
         family = self.d * self.beta * 4 + self.beta * (4 + 4) + 4
-        return self.n * per_point + family
+        return self.n * per_point + family + 4  # + n_valid scalar
 
     def shape_signature(self) -> tuple:
         """Everything that determines the compiled query step.

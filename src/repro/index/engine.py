@@ -63,7 +63,15 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class QueryState:
-    """Device-resident table-group state (a pytree)."""
+    """Device-resident table-group state (a pytree).
+
+    ``codes``/``points`` are materialized at the config's row *capacity*
+    (``IndexConfig.n``); ``n_valid`` counts the live rows.  Rows at or
+    beyond ``n_valid`` are dead weight the query step masks out of both
+    histogram passes, which is what lets streaming compaction append rows
+    into reserved capacity without changing any compiled shape.  A static
+    (non-streaming) build simply has ``n_valid == capacity``.
+    """
 
     codes: jax.Array  # (n, beta) int32, sharded (("pod","data"), None)
     points: jax.Array  # (n, d) vec_dtype, sharded likewise
@@ -71,11 +79,13 @@ class QueryState:
     b_int: jax.Array  # (beta,) int32, replicated
     b_frac: jax.Array  # (beta,) f32, replicated
     width: jax.Array  # () f32
+    n_valid: jax.Array  # () int32, replicated — live rows in [0, n]
 
 
 jax.tree_util.register_dataclass(
     QueryState,
-    data_fields=["codes", "points", "proj", "b_int", "b_frac", "width"],
+    data_fields=["codes", "points", "proj", "b_int", "b_frac", "width",
+                 "n_valid"],
     meta_fields=[],
 )
 
@@ -95,6 +105,7 @@ def shardings(mesh: Mesh):
             b_int=NamedSharding(mesh, P(None)),
             b_frac=NamedSharding(mesh, P(None)),
             width=NamedSharding(mesh, P()),
+            n_valid=NamedSharding(mesh, P()),
         ),
         "queries": NamedSharding(mesh, P(None, None)),
         "q_meta": NamedSharding(mesh, P(None)),
@@ -147,14 +158,32 @@ def _query_shard(
     codes_blocks = state.codes.reshape(n_blocks, block, cfg.beta)
     point_blocks = state.points.reshape(n_blocks, block, cfg.d)
 
-    # ---- pass 1: level histograms -> stop level ---------------------------
-    def pass1(carry, blk):
-        hist_f, hist_g = carry
-        cb, pb = blk
+    # Global row offsets per block: streaming states reserve row capacity
+    # above the live count, and rows >= n_valid must vanish from both
+    # passes (their first-frequent level is forced past every stop level).
+    shard_off = jnp.int32(0)
+    mul = 1
+    for ax, size in reversed(tuple(zip(mesh_axes, axis_sizes))):
+        shard_off = shard_off + jax.lax.axis_index(ax) * mul
+        mul *= size
+    shard_off = shard_off * n_loc
+    boffs = shard_off + jnp.arange(n_blocks, dtype=jnp.int32) * block
+    n_valid = state.n_valid.astype(jnp.int32)
+
+    def _masked_freq_level(cb, boff):
+        """(q_loc, block) first-frequent level, dead rows forced to L+1."""
         lf = ops.freq_level(
             cb, codes_q, mu, c=c, n_levels=L, beta_q=beta_q,
             use_pallas=cfg.use_pallas, unroll=cfg.analysis_unroll,
-        )  # (q_loc, block)
+        )
+        row_ok = (boff + jnp.arange(block, dtype=jnp.int32)) < n_valid
+        return jnp.where(row_ok[None, :], lf, jnp.int32(L + 1))
+
+    # ---- pass 1: level histograms -> stop level ---------------------------
+    def pass1(carry, blk):
+        hist_f, hist_g = carry
+        cb, pb, boff = blk
+        lf = _masked_freq_level(cb, boff)  # (q_loc, block)
         if abs(cfg.p - 2.0) < 1e-9:
             dist = _per_query_l2(qf32, wf32, pb.astype(jnp.float32))
         else:
@@ -176,7 +205,7 @@ def _query_shard(
 
     hist0 = jnp.zeros((q_loc, L + 2), jnp.int32)
     (hist_f, hist_g), _ = jax.lax.scan(
-        pass1, (hist0, hist0), (codes_blocks, point_blocks),
+        pass1, (hist0, hist0), (codes_blocks, point_blocks, boffs),
         unroll=n_blocks if cfg.analysis_unroll else 1,
     )
     hist_f = jax.lax.psum(hist_f, mesh_axes)
@@ -199,10 +228,7 @@ def _query_shard(
     def pass2(carry, blk):
         vals, idx = carry
         cb, pb, boff = blk
-        lf = ops.freq_level(
-            cb, codes_q, mu, c=c, n_levels=L, beta_q=beta_q,
-            use_pallas=cfg.use_pallas, unroll=cfg.analysis_unroll,
-        )
+        lf = _masked_freq_level(cb, boff)
         if abs(cfg.p - 2.0) < 1e-9:
             dist = _per_query_l2(qf32, wf32, pb.astype(jnp.float32))
         else:
@@ -215,13 +241,6 @@ def _query_shard(
         mvals, mpos = jax.lax.top_k(-vals, k)
         return (-mvals, jnp.take_along_axis(idx, mpos, axis=1)), None
 
-    shard_off = jnp.int32(0)
-    mul = 1
-    for ax, size in reversed(tuple(zip(mesh_axes, axis_sizes))):
-        shard_off = shard_off + jax.lax.axis_index(ax) * mul
-        mul *= size
-    shard_off = shard_off * n_loc
-    boffs = shard_off + jnp.arange(n_blocks, dtype=jnp.int32) * block
     init = (
         jnp.full((q_loc, k), jnp.inf, jnp.float32),
         jnp.full((q_loc, k), -1, jnp.int32),
@@ -306,6 +325,7 @@ def make_query_step(mesh: Mesh, cfg: IndexConfig):
                 b_int=P(None),
                 b_frac=P(None),
                 width=P(),
+                n_valid=P(),
             ),
             P(None, None),
             P(None, None),
@@ -370,6 +390,7 @@ def query_input_specs(cfg: IndexConfig):
         b_int=jax.ShapeDtypeStruct((cfg.beta,), jnp.int32),
         b_frac=jax.ShapeDtypeStruct((cfg.beta,), jnp.float32),
         width=jax.ShapeDtypeStruct((), jnp.float32),
+        n_valid=jax.ShapeDtypeStruct((), jnp.int32),
     )
     return dict(
         state=state,

@@ -24,10 +24,17 @@ Steps:
               when it fills or when the oldest request has waited
               ``--max-delay-ms``.  Both frontends are bit-exact on
               identical traffic.
+              ``--insert-rate`` turns either mode into a mixed read/write
+              replay: that fraction of the op stream becomes streaming
+              inserts (delta memtable -> sealed segments at
+              ``--delta-seal-rows`` -> compaction into reserved state
+              capacity), with recall on fresh inserts checked pre- and
+              post-compaction.
   4. report — per-group occupancy / stop-level / n_checked stats, compile
               sharing, throughput (plus queue-wait percentiles and launch
-              causes in async mode); ``--check`` cross-validates every
-              answer against the host oracle WLSHIndex.search_dense
+              causes in async mode, delta/compaction counters in mixed
+              mode); ``--check`` cross-validates every answer against the
+              host oracle WLSHIndex.search_dense
 
 ``--plan-out`` persists the ServingPlan npz so a separate serving job can
 start without re-planning.
@@ -54,25 +61,44 @@ from ..serving.retrieval import RetrievalService, ServiceConfig
 __all__ = ["parse_bytes", "run", "main"]
 
 _UNITS = {"": 1, "B": 1, "KB": 1 << 10, "MB": 1 << 20, "GB": 1 << 30,
-          "TB": 1 << 40}
+          "TB": 1 << 40,
+          # IEC suffixes are the same binary multiples this parser always
+          # meant ("512MiB" == "512MB" == 512 * 2**20)
+          "KIB": 1 << 10, "MIB": 1 << 20, "GIB": 1 << 30, "TIB": 1 << 40}
 
 
 def parse_bytes(text: str) -> int:
-    """Parse a byte budget like ``"512MB"``, ``"2GB"`` or a plain int."""
-    m = re.fullmatch(r"\s*(\d+(?:\.\d+)?)\s*([A-Za-z]*)\s*", text)
-    unit = m.group(2).upper() if m else None
-    if m is None or unit not in _UNITS:
+    """Parse a byte budget like ``"512MB"``, ``"2GiB"`` or a plain int.
+
+    Suffixes are case-insensitive (``512mb``, ``2gb``) and both the
+    conventional (KB/MB/GB/TB) and IEC (KiB/MiB/GiB/TiB) spellings name
+    the binary multiples.  Zero or negative budgets are rejected with an
+    explicit message (a budget under one byte cannot hold any state).
+    """
+    m = re.fullmatch(r"\s*(-?\d+(?:\.\d+)?)\s*([A-Za-z]*)\s*", text)
+    if m is None:
         raise argparse.ArgumentTypeError(
             f"can't parse byte size {text!r} (use e.g. 1073741824, 512MB, "
-            f"2GB)"
+            f"512MiB, 2gb)"
+        )
+    unit = m.group(2).upper()
+    if unit not in _UNITS:
+        raise argparse.ArgumentTypeError(
+            f"unknown byte-size unit {m.group(2)!r} in {text!r} (use "
+            f"B, KB/MB/GB/TB or KiB/MiB/GiB/TiB, any case)"
+        )
+    value = float(m.group(1))
+    if value <= 0:
+        raise argparse.ArgumentTypeError(
+            f"byte budget must be positive, got {text!r}"
         )
     if unit == "" and "." in m.group(1):  # "1.5" meaning 1.5GB, probably
         raise argparse.ArgumentTypeError(
             f"fractional byte size {text!r} has no unit — missing a "
             f"KB/MB/GB suffix?"
         )
-    nbytes = int(float(m.group(1)) * _UNITS[unit])
-    if nbytes < 1:  # "0", "0B", "0.0001KB", ...
+    nbytes = int(value * _UNITS[unit])
+    if nbytes < 1:  # "0.0001KB", ...
         raise argparse.ArgumentTypeError(
             f"byte size {text!r} is under 1 byte"
         )
@@ -104,12 +130,17 @@ def run(args) -> dict:
 
     # ---- build --------------------------------------------------------------
     t0 = time.time()
+    reserve = args.delta_reserve_rows
+    if reserve is None:  # headroom for every op turning out to be an insert
+        reserve = args.n_queries if args.insert_rate > 0 else 0
     svc = RetrievalService(
         plan, data,
         cfg=ServiceConfig(k=args.k, q_batch=args.q_batch,
                           max_delay_ms=args.max_delay_ms,
                           max_resident_groups=args.max_resident_groups,
                           device_budget_bytes=args.device_budget,
+                          delta_seal_rows=args.delta_seal_rows,
+                          delta_reserve_rows=reserve,
                           use_pallas=False if args.no_pallas else None),
     )
     svc.warmup()
@@ -130,6 +161,9 @@ def run(args) -> dict:
     )
     qpts = qpts + rng.normal(0, args.q_noise, qpts.shape).astype(np.float32)
     async_report = None
+    if args.insert_rate > 0:
+        return _serve_mixed(args, svc, plan, rng, qpts, wids,
+                            t_plan=t_plan, t_build=t_build)
     if args.use_async:
         arrivals = np.cumsum(
             rng.exponential(1.0 / args.arrival_rate, args.n_queries)
@@ -206,6 +240,99 @@ def run(args) -> dict:
     }
 
 
+def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
+    """Mixed read/write replay: a fraction of the op stream is inserts.
+
+    Each op is an insert with probability ``--insert-rate``; inserted
+    vectors are fresh (offset past the corpus range) so recall on them is
+    checkable.  Sync mode serves op by op; ``--async`` replays the same
+    schedule open-loop at ``--arrival-rate`` with writes applied at their
+    arrival instants.  ``--check`` verifies pre-compaction recall (every
+    insert answers its own self-query via the exact delta scan), then
+    compacts and verifies the compiled path returns the same ids — with
+    the compiled-step count pinned across the whole run.
+    """
+    n_ops = args.n_queries
+    is_insert = rng.random(n_ops) < args.insert_rate
+    ins_vecs = qpts + (
+        args.value_range + 7.0 * np.arange(n_ops)[:, None]
+    ).astype(np.float32)
+    inserted = []  # (pid, vector, weight_id)
+    n_compiled0 = svc.step_cache.n_compiled
+    t0 = time.time()
+    if args.use_async:
+        asvc = AsyncRetrievalService(svc, clock=ManualClock())
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / args.arrival_rate, n_ops)
+        )
+        for i in range(n_ops):
+            while True:  # fire deadlines expiring before this arrival
+                nd = asvc.next_deadline()
+                if nd is None or nd > arrivals[i]:
+                    break
+                asvc.clock.advance_to(nd)
+                asvc.poll()
+            asvc.clock.advance_to(arrivals[i])
+            if is_insert[i]:
+                pid = asvc.insert(ins_vecs[i], int(wids[i]))
+                inserted.append((pid, ins_vecs[i], int(wids[i])))
+            else:
+                asvc.submit(qpts[i], wids[i])
+        while asvc.pending_count:
+            asvc.clock.advance_to(asvc.next_deadline())
+            asvc.poll()
+    else:
+        for i in range(n_ops):
+            if is_insert[i]:
+                pid = svc.insert(ins_vecs[i], int(wids[i]))
+                inserted.append((pid, ins_vecs[i], int(wids[i])))
+            else:
+                svc.query(qpts[i : i + 1], wids[i : i + 1])
+    t_serve = time.time() - t0
+    n_writes = len(inserted)
+    # a low rate can sample zero inserts: no write ever happened, so the
+    # delta index was never created and the summary is empty
+    delta = svc.delta_summary() or dict(
+        n_seals=0, n_compactions=0, n_pending=0
+    )
+    print(f"serve[mixed{'/async' if args.use_async else ''}]: "
+          f"{n_ops - n_writes} queries + {n_writes} inserts "
+          f"(write mix {args.insert_rate:.0%}) in {t_serve:.2f}s "
+          f"({n_ops / t_serve:.1f} ops/s); delta: {delta['n_seals']} seals, "
+          f"{delta['n_compactions']} compactions, {delta['n_pending']} "
+          f"rows pending")
+
+    n_bad = 0
+    if args.check and inserted:
+        for pid, v, w in inserted:  # pre-compaction: exact delta scan
+            n_bad += pid not in svc.query(v[None], [w]).ids[0]
+        absorbed = svc.compact()
+        for pid, v, w in inserted:  # post-compaction: compiled index path
+            n_bad += pid not in svc.query(v[None], [w]).ids[0]
+        recompiled = svc.step_cache.n_compiled - n_compiled0
+        n_bad += recompiled  # streaming must never compile a new step
+        print(f"check[streaming]: {2 * len(inserted) - n_bad}"
+              f"/{2 * len(inserted)} insert self-queries exact "
+              f"(pre + post compaction of {absorbed} rows), "
+              f"{recompiled} recompiles")
+        assert n_bad == 0, f"{n_bad} streaming checks failed"
+    return {
+        "n_groups": plan.n_groups,
+        "beta_total": plan.beta_total,
+        "n_compiled_steps": svc.step_cache.n_compiled,
+        "t_plan": t_plan,
+        "t_build": t_build,
+        "t_serve": t_serve,
+        "qps": n_ops / t_serve,
+        "n_inserts": n_writes,
+        "stats": svc.stats_summary(),
+        "cache": svc.cache_summary(),
+        "delta": svc.delta_summary(),
+        "n_check_failures": n_bad,
+        "async": None,
+    }
+
+
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4_096)
@@ -239,6 +366,18 @@ def parse_args(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=2_000.0,
                     help="open-loop Poisson arrival rate (queries/s of "
                          "virtual traffic) for --async replay")
+    ap.add_argument("--insert-rate", type=float, default=0.0,
+                    help="mixed read/write replay: fraction of the op "
+                         "stream that are streaming inserts (0..1); with "
+                         "--check, verifies insert recall pre and post "
+                         "compaction")
+    ap.add_argument("--delta-seal-rows", type=int, default=32,
+                    help="streaming: seal a group's open delta memtable "
+                         "into a hashed segment at this row count")
+    ap.add_argument("--delta-reserve-rows", type=int, default=None,
+                    help="row capacity reserved per group state for "
+                         "compacted inserts (default: --n-queries when "
+                         "--insert-rate > 0, else 0)")
     ap.add_argument("--max-resident-groups", type=int, default=None,
                     help="page group states: keep at most this many device-"
                          "resident (LRU eviction + host offload/restore)")
@@ -247,7 +386,10 @@ def parse_args(argv=None):
                     help="page group states under this device byte budget "
                          "(accepts 512MB / 2GB / plain bytes)")
     ap.add_argument("--no-pallas", action="store_true")
-    return ap.parse_args(argv)
+    args = ap.parse_args(argv)
+    if not 0.0 <= args.insert_rate <= 1.0:
+        ap.error(f"--insert-rate must be in [0, 1], got {args.insert_rate}")
+    return args
 
 
 def main(argv=None):

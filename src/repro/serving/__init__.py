@@ -1,19 +1,28 @@
 """Serving substrate for the multi-group retrieval stack.
 
 Sync + async weight-routed frontends over a shared batching core, group
-states paged through a budgeted ``StateCache``, plus the LM decode
-loop/samplers.
+states paged through a budgeted ``StateCache``, streaming inserts/deletes
+through the ``DeltaIndex`` subsystem, plus the LM decode loop/samplers.
 """
 
 from .async_service import (
     AsyncRetrievalService,
     ManualClock,
+    Overloaded,
     QueryAnswer,
     QueryFuture,
     replay_open_loop,
 )
-from .batching import Batcher, BatchPlan, coalesce, pad_take, run_plans
+from .batching import (
+    Batcher,
+    BatchPlan,
+    coalesce,
+    merge_topk,
+    pad_take,
+    run_plans,
+)
 from .decode import SamplerConfig, generate, make_serve_step
+from .delta import DeltaIndex, DeltaStats
 from .state_cache import CacheStats, StateCache
 from .retrieval import (
     GroupServeStats,
@@ -27,8 +36,11 @@ __all__ = [
     "BatchPlan",
     "Batcher",
     "CacheStats",
+    "DeltaIndex",
+    "DeltaStats",
     "GroupServeStats",
     "ManualClock",
+    "Overloaded",
     "QueryAnswer",
     "QueryFuture",
     "RetrievalResult",
@@ -39,6 +51,7 @@ __all__ = [
     "coalesce",
     "generate",
     "make_serve_step",
+    "merge_topk",
     "pad_take",
     "replay_open_loop",
     "run_plans",

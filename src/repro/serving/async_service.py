@@ -41,10 +41,33 @@ from .retrieval import RetrievalResult, RetrievalService
 __all__ = [
     "AsyncRetrievalService",
     "ManualClock",
+    "Overloaded",
     "QueryAnswer",
     "QueryFuture",
     "replay_open_loop",
 ]
+
+
+class Overloaded(RuntimeError):
+    """Backpressure: a group's pending buffer is at ``max_pending``.
+
+    Raised by ``AsyncRetrievalService.submit`` *before* the request is
+    enqueued (the caller holds no future and has lost nothing).  Carries
+    the observed depth so callers can shed load or back off:
+
+    * ``group_id`` — the group whose buffer is full
+    * ``depth`` — its pending depth at rejection time
+    * ``max_pending`` — the configured ``ServiceConfig.max_pending`` cap
+    """
+
+    def __init__(self, group_id: int, depth: int, max_pending: int):
+        super().__init__(
+            f"group {group_id} pending buffer is full "
+            f"({depth}/{max_pending}); poll() or drain() frees it"
+        )
+        self.group_id = int(group_id)
+        self.depth = int(depth)
+        self.max_pending = int(max_pending)
 
 
 class ManualClock:
@@ -145,6 +168,7 @@ class AsyncRetrievalService:
         service: RetrievalService | Batcher,
         max_delay_ms: float | None = None,
         clock=time.monotonic,
+        compact_on_idle: bool = True,
     ):
         self.batcher = (
             service.batcher if isinstance(service, RetrievalService)
@@ -156,6 +180,11 @@ class AsyncRetrievalService:
             raise ValueError(f"max_delay_ms must be >= 0, got {max_delay_ms}")
         self.max_delay_ms = float(max_delay_ms)
         self.clock = clock
+        # background compaction: an idle poll (nothing expired to launch)
+        # absorbs the streaming delta's *sealed* backlog into the main
+        # group states, capacity permitting — the single-threaded analog
+        # of a background compaction thread
+        self.compact_on_idle = bool(compact_on_idle)
         self._pending: dict[int, collections.deque[_Pending]] = (
             collections.defaultdict(collections.deque)
         )
@@ -192,6 +221,13 @@ class AsyncRetrievalService:
                 f"got shape {query.shape}"
             )
         gi = int(self.batcher.route(weight_id)[0])
+        max_pending = self.batcher.cfg.max_pending
+        if max_pending is not None and (
+            len(self._pending[gi]) >= max_pending
+        ):
+            # reject before enqueueing: the caller holds no future, the
+            # buffer stays bounded, and poll()/drain() frees capacity
+            raise Overloaded(gi, len(self._pending[gi]), max_pending)
         if deadline is None:
             deadline = now + self.max_delay_ms / 1e3
         elif not np.isfinite(deadline):
@@ -218,7 +254,10 @@ class AsyncRetrievalService:
     def poll(self, now: float | None = None) -> int:
         """Launch every group whose oldest pending deadline has expired.
 
-        Returns the number of batches launched.
+        Returns the number of batches launched.  An idle poll (nothing
+        launched) additionally compacts the streaming delta's sealed
+        backlog when ``compact_on_idle`` is set — background compaction
+        rides the event loop's quiet ticks, never delaying a launch.
         """
         if now is None:
             now = self.clock()
@@ -228,7 +267,30 @@ class AsyncRetrievalService:
             if q and min(r.deadline for r in q) <= now:
                 self._launch(gi, "deadline")
                 n += 1
+        if n == 0 and self.compact_on_idle and (
+            self.batcher.delta is not None
+        ):
+            self.batcher.delta.compact_sealed()
         return n
+
+    # ------------------------------------------------------------- streaming
+
+    def insert(self, vector, weight_id) -> int:
+        """Insert one vector into ``weight_id``'s group (applied at once).
+
+        Writes are synchronous even on the async frontend: the row is in
+        its group's delta memtable — and visible to queries — when this
+        returns.  Returns the assigned global point id.
+        """
+        return self.batcher.insert(vector, weight_id)
+
+    def delete(self, point_id: int) -> None:
+        """Tombstone a global point id; it never appears in results again."""
+        self.batcher.delete(point_id)
+
+    def compact(self, group: int | None = None) -> int:
+        """Flush and compact delta segments (see ``Batcher.compact``)."""
+        return self.batcher.compact(group)
 
     def drain(self) -> int:
         """Flush all pending buffers regardless of deadline."""

@@ -53,6 +53,7 @@ __all__ = [
     "GroupServeStats",
     "ServiceConfig",
     "coalesce",
+    "merge_topk",
     "pad_take",
     "run_plans",
 ]
@@ -80,6 +81,16 @@ class ServiceConfig:
     # state bytes (IndexConfig.state_nbytes accounting) under this budget
     offload_evicted: bool = True  # evicted states keep a host copy (restore
     # = one upload); False discards them (re-acquire rebuilds from scratch)
+    delta_seal_rows: int = 1024  # streaming: a group's open delta memtable
+    # seals into a hashed segment at this row count
+    delta_reserve_rows: int = 0  # row capacity reserved per group state for
+    # compacted inserts; 0 = static index (inserts still serve from the
+    # delta scan, but compaction has nowhere to append)
+    auto_compact_segments: int | None = None  # compact a group once it
+    # holds this many sealed segments (None = compaction only on explicit
+    # compact() calls / the async frontend's idle poll)
+    max_pending: int | None = None  # async backpressure: cap per-group
+    # pending buffers; submit raises Overloaded instead of growing unbounded
 
     def __post_init__(self):
         if self.k < 1:
@@ -122,6 +133,26 @@ class ServiceConfig:
             raise ValueError(
                 f"device_budget_bytes must be >= 1 or None, got "
                 f"{self.device_budget_bytes}"
+            )
+        if self.delta_seal_rows < 1:
+            raise ValueError(
+                f"delta_seal_rows must be >= 1, got {self.delta_seal_rows}"
+            )
+        if self.delta_reserve_rows < 0:
+            raise ValueError(
+                f"delta_reserve_rows must be >= 0, got "
+                f"{self.delta_reserve_rows}"
+            )
+        if self.auto_compact_segments is not None and (
+            self.auto_compact_segments < 1
+        ):
+            raise ValueError(
+                f"auto_compact_segments must be >= 1 or None, got "
+                f"{self.auto_compact_segments}"
+            )
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError(
+                f"max_pending must be >= 1 or None, got {self.max_pending}"
             )
         try:
             jnp.dtype(self.vec_dtype)
@@ -195,6 +226,42 @@ def run_plans(plans, queries, weight_ids, run_batch, k):
     return out_ids, out_d, out_stop, out_chk
 
 
+def merge_topk(ids, dists, extra_ids, extra_dists, k, drop=None):
+    """Merge indexed hits with delta-scan hits into per-row top-k.
+
+    ``ids``/``dists`` are the compiled index path's per-row candidates
+    (sorted ascending, -1/inf = missing); ``extra_ids``/``extra_dists``
+    the exact delta-scan hits (same conventions, disjoint ids — delta rows
+    are by construction not yet in the index).  ``drop`` is the tombstone
+    id set: dropped ids never appear, their slots backfilled from the
+    remaining candidates.  Pure numpy, shared with the batching property
+    tests; invariants:
+
+    * output sorted ascending by distance, missing slots -1/inf at the end
+    * no candidate duplicated or invented; tombstoned ids filtered
+    * distance ties prefer the indexed operand (then lower slot), so with
+      no delta hits and no tombstones the indexed rows pass through
+      bit-exactly — the post-compaction parity guarantee
+    """
+    ids = np.atleast_2d(np.asarray(ids)).astype(np.int64)
+    dists = np.atleast_2d(np.asarray(dists, np.float32))
+    extra_ids = np.atleast_2d(np.asarray(extra_ids)).astype(np.int64)
+    extra_dists = np.atleast_2d(np.asarray(extra_dists, np.float32))
+    cand_ids = np.concatenate([ids, extra_ids], axis=1)
+    cand_d = np.concatenate([dists, extra_dists], axis=1)
+    invalid = cand_ids < 0
+    if drop:
+        tomb = np.fromiter(drop, np.int64, count=len(drop))
+        invalid |= np.isin(cand_ids, tomb)
+    cand_d = np.where(invalid, np.float32(np.inf), cand_d)
+    cand_ids = np.where(invalid, np.int64(-1), cand_ids)
+    order = np.argsort(cand_d, axis=1, kind="stable")[:, :k]
+    out_ids = np.take_along_axis(cand_ids, order, axis=1)
+    out_d = np.take_along_axis(cand_d, order, axis=1)
+    out_ids = np.where(np.isinf(out_d), np.int64(-1), out_ids)
+    return out_ids.astype(np.int32), out_d.astype(np.float32)
+
+
 # ---------------------------------------------------------------------- stats
 
 
@@ -216,6 +283,7 @@ class GroupServeStats:
     n_state_builds: int = 0  # cold builds of this group's state
     n_state_restores: int = 0  # host-copy uploads after an eviction
     n_state_evictions: int = 0  # times this group's state left the device
+    n_state_invalidations: int = 0  # compaction-driven version bumps
 
     @property
     def occupancy(self) -> float:
@@ -236,6 +304,7 @@ class GroupServeStats:
             n_state_builds=self.n_state_builds,
             n_state_restores=self.n_state_restores,
             n_state_evictions=self.n_state_evictions,
+            n_state_invalidations=self.n_state_invalidations,
         )
 
 
@@ -280,6 +349,7 @@ class Batcher:
         self.cfg = cfg
         self.step_cache = QueryStepCache()
         self._group_cfgs: dict[int, IndexConfig] = {}
+        self._delta = None  # lazy DeltaIndex, created on first write
         self.state_cache = StateCache(
             build=self._build_state,
             nbytes_of=lambda gi: self.group_config(gi).state_nbytes,
@@ -298,8 +368,20 @@ class Batcher:
 
     # ------------------------------------------------------------- per group
 
+    def row_capacity(self) -> int:
+        """Row capacity of every group state (base corpus + delta reserve).
+
+        ``ServiceConfig.delta_reserve_rows`` preallocates headroom that
+        streaming compaction appends into without changing any compiled
+        shape; the capacity is rounded up to a mesh-size multiple so the
+        row sharding stays even.  All groups share one capacity, which
+        preserves the shape-bucket compiled-step sharing.
+        """
+        cap = self.plan.n + self.cfg.delta_reserve_rows
+        return cap + (-cap) % self.mesh.size
+
     def _block_n(self) -> int:
-        n_loc = self.plan.n // self.mesh.size
+        n_loc = self.row_capacity() // self.mesh.size
         want = self.cfg.block_n if self.cfg.block_n is not None else n_loc
         block = max(1, min(want, n_loc))
         while n_loc % block:
@@ -312,7 +394,7 @@ class Batcher:
         if cfg is None:
             g = self.plan.groups[gi]
             cfg = IndexConfig(
-                n=self.plan.n,
+                n=self.row_capacity(),
                 d=self.plan.d,
                 beta=pad_beta(g.beta_group, self.cfg.beta_buckets),
                 q_batch=self.cfg.q_batch,
@@ -325,15 +407,25 @@ class Batcher:
                 budget_override=self.cfg.budget_override,
                 vec_dtype=self.cfg.vec_dtype,
                 use_pallas=self.cfg.use_pallas,
+                delta_seal_rows=self.cfg.delta_seal_rows,
             )
             self._group_cfgs[gi] = cfg
         return cfg
 
     def _build_state(self, gi: int):
-        """Cold-path StateCache builder: materialize group ``gi`` on device."""
+        """Cold-path StateCache builder: materialize group ``gi`` on device.
+
+        A group that has absorbed delta compactions rebuilds over its
+        union corpus (base points + compacted rows, sealed codes reused),
+        so paging in discard mode can never silently drop streamed rows.
+        """
+        extra_points = extra_codes = None
+        if self._delta is not None:
+            extra_points, extra_codes = self._delta.compacted_rows(gi)
         return build_group_state(
             self.mesh, self.group_config(gi), self.points,
             self.plan.groups[gi],
+            extra_points=extra_points, extra_codes=extra_codes,
         )
 
     def _on_cache_event(self, gi: int, kind: str) -> None:
@@ -347,6 +439,8 @@ class Batcher:
             st.n_state_restores += 1
         elif kind == "evict":
             st.n_state_evictions += 1
+        elif kind == "invalidate":
+            st.n_state_invalidations += 1
 
     def warmup(self, groups=None) -> None:
         """Build states and compile steps ahead of traffic.
@@ -413,6 +507,43 @@ class Batcher:
         """Unweighted mean batch occupancy over groups that served traffic."""
         occs = [s.occupancy for s in self.stats.values() if s.n_batches]
         return float(np.mean(occs)) if occs else float("nan")
+
+    # ------------------------------------------------------------- streaming
+
+    @property
+    def delta(self):
+        """The streaming ``DeltaIndex``, or None before the first write."""
+        return self._delta
+
+    def delta_index(self):
+        """Create on first use (and return) the streaming ``DeltaIndex``."""
+        if self._delta is None:
+            from .delta import DeltaIndex  # deferred: delta imports batching
+
+            self._delta = DeltaIndex(self)
+        return self._delta
+
+    def insert(self, vector, weight_id) -> int:
+        """Insert one vector into ``weight_id``'s group; returns its id."""
+        return self.delta_index().insert(vector, weight_id)
+
+    def delete(self, point_id: int) -> None:
+        """Tombstone ``point_id``: it never appears in results again."""
+        self.delta_index().delete(point_id)
+
+    def compact(self, group: int | None = None) -> int:
+        """Compact sealed delta segments into the main group state(s).
+
+        Returns the number of rows absorbed (0 with nothing sealed or no
+        streaming writes yet).
+        """
+        if self._delta is None:
+            return 0
+        return self._delta.compact(group)
+
+    def delta_summary(self) -> dict:
+        """Aggregate streaming counters (empty dict before any write)."""
+        return self._delta.summary() if self._delta is not None else {}
 
     # --------------------------------------------------------------- serving
 
@@ -486,6 +617,13 @@ class Batcher:
             dists = np.asarray(d_b)[:real]
             stop = np.asarray(stop_b)[:real]
             chk = np.asarray(chk_b)[:real]
+        if self._delta is not None:
+            # translate appended state rows to global ids, merge the exact
+            # delta-scan hits, filter tombstones (no-op passthrough for a
+            # group with nothing pending — the parity guarantee)
+            ids, dists = self._delta.augment(
+                gi, queries, weight_ids, ids, dists
+            )
         st = self.stats[gi]
         st.n_batches += 1
         st.n_queries += real

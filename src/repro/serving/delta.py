@@ -1,0 +1,320 @@
+"""Streaming delta-index orchestration: inserts, deletes, compaction.
+
+``DeltaIndex`` is the mutable side of the serving stack.  The compiled
+group states stay immutable between compactions; everything that moves
+lives here, per table group:
+
+  insert     ``insert(vector, weight_id)`` routes the row to
+             ``plan.group_of[weight_id]`` (inserts are tenant-scoped: the
+             row is indexed in — and visible to — its weight's table
+             group), assigns the next global id past the corpus epoch,
+             and appends to the group's open memtable.  Fresh rows are
+             served immediately by exact scan, so recall on them is
+             perfect before any index work happens.
+  seal       at ``ServiceConfig.delta_seal_rows`` rows the memtable is
+             re-hashed with the group's original family seeds
+             (``builder.seal_segment``) into a ``SealedSegment``.
+  compact    sealed segments splice into the group state's reserved row
+             capacity (``builder.append_to_state``) under a short
+             ``StateCache`` lease, then ``StateCache.replace`` installs
+             the new state at a bumped version — invalidating exactly one
+             group's cached bytes, never another group's state and never
+             a compiled step.  The result is bit-exact with a fresh
+             ``build_group_state`` over the union corpus.
+  delete     ``delete(id)`` tombstones a global id (base or inserted);
+             tombstoned ids are filtered out of every merged top-k.
+             Tombstones survive compaction — purging them from the main
+             state is a future rebuild-style operation.
+
+Every query launched through ``Batcher.run_batch`` calls ``augment``:
+state-row indices translate to global ids, the group's pending rows are
+scanned exactly with the engine's own distance form, and
+``batching.merge_topk`` folds the two candidate lists under the no-drop /
+no-dup / tombstone invariants.  A group with nothing pending and no
+tombstones passes through bit-exactly — the post-compaction parity
+guarantee.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..index.builder import append_to_state, seal_segment
+from ..index.streaming import DeltaSegment, SealedSegment, scan_topk
+from .batching import merge_topk
+
+__all__ = ["DeltaIndex", "DeltaStats"]
+
+
+@dataclasses.dataclass
+class DeltaStats:
+    """Running streaming counters (whole-service, monotone)."""
+
+    n_inserts: int = 0  # rows ever inserted
+    n_deletes: int = 0  # tombstones ever placed
+    n_seals: int = 0  # memtable -> sealed-segment transitions
+    n_compactions: int = 0  # compaction transactions committed
+    n_rows_compacted: int = 0  # rows absorbed into main states
+    n_delta_scans: int = 0  # launches that also scanned pending rows
+
+
+class _GroupDelta:
+    """One group's mutable side: open memtable, sealed queue, append log."""
+
+    def __init__(self, d: int):
+        self.open = DeltaSegment(d)
+        self.sealed: list[SealedSegment] = []
+        # append log of compacted rows (host copies): row r >= plan.n of
+        # the group state maps to compacted_ids[r - plan.n]; vectors and
+        # sealed codes are retained so a discard-mode cold rebuild can
+        # reproduce the union state bit-exactly
+        self.compacted_ids = np.empty(0, np.int64)
+        self.compacted_vecs: list[np.ndarray] = []
+        self.compacted_codes: list[np.ndarray] = []
+
+    @property
+    def n_pending(self) -> int:
+        """Rows inserted but not yet compacted (open + sealed)."""
+        return len(self.open) + sum(len(s) for s in self.sealed)
+
+    def pending_rows(self) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, vectors) of every uncompacted row, insertion order."""
+        ids = [s.ids for s in self.sealed] + [self.open.ids]
+        vecs = [s.vectors for s in self.sealed] + [self.open.vectors]
+        return np.concatenate(ids), np.concatenate(vecs)
+
+
+class DeltaIndex:
+    """Per-group delta segments + tombstones over a ``Batcher``.
+
+    Created lazily by ``Batcher.delta_index()`` on the first write; until
+    then the serving fast path carries zero streaming overhead.  Single-
+    threaded like the frontends that drive it: compaction runs inline
+    (``compact``), opportunistically from the async frontend's idle poll,
+    or automatically once a group holds
+    ``ServiceConfig.auto_compact_segments`` sealed segments.
+    """
+
+    def __init__(self, batcher):
+        self.batcher = batcher
+        plan = batcher.plan
+        self.base_n = int(plan.n)
+        # global ids continue from the plan's corpus epoch, so a service
+        # resumed from a compacted plan export never reuses an id
+        self._next_id = int(plan.corpus_epoch or plan.n)
+        self._groups = {
+            gi: _GroupDelta(plan.d) for gi in range(plan.n_groups)
+        }
+        self.tombstones: set[int] = set()
+        self.stats = DeltaStats()
+
+    # -------------------------------------------------------------- writes
+
+    def insert(self, vector, weight_id) -> int:
+        """Insert one vector under ``weight_id``; returns its global id.
+
+        The row lands in ``plan.group_of[weight_id]``'s open memtable and
+        is queryable immediately (exact scan).  Reaching
+        ``delta_seal_rows`` buffered rows seals the memtable; with
+        ``auto_compact_segments`` set, enough sealed segments trigger an
+        inline compaction.
+        """
+        gi = int(self.batcher.route(weight_id)[0])
+        gd = self._groups[gi]
+        pid = self._next_id
+        gd.open.append(pid, np.asarray(vector, np.float32))
+        self._next_id += 1
+        self.stats.n_inserts += 1
+        if len(gd.open) >= self.batcher.cfg.delta_seal_rows:
+            self.seal(gi)
+        return pid
+
+    def delete(self, point_id: int) -> None:
+        """Tombstone a global id (base corpus row or streamed insert).
+
+        Tombstoned ids are filtered from every subsequent top-k merge;
+        result slots they would have held backfill from the remaining
+        candidates.  Raises on ids outside the corpus ever served.
+        """
+        pid = int(point_id)
+        if not 0 <= pid < self._next_id:
+            raise ValueError(
+                f"delete of unknown id {pid} (corpus ids span "
+                f"[0, {self._next_id}))"
+            )
+        self.tombstones.add(pid)
+        self.stats.n_deletes += 1
+
+    def seal(self, gi: int) -> None:
+        """Seal group ``gi``'s open memtable into a hashed segment.
+
+        Re-hashes the rows with the group's original family seeds at the
+        padded table width; no compiled step is touched.  A no-op on an
+        empty memtable.
+        """
+        gi = int(gi)
+        gd = self._groups[gi]
+        if not len(gd.open):
+            return
+        ids, vecs = gd.open.drain()
+        cfg = self.batcher.group_config(gi)
+        g = self.batcher.plan.groups[gi]
+        if g.codes is not None:
+            codes = seal_segment(cfg, g, vecs)
+        else:  # device-encode plans hash through the (leased) state proj
+            with self.batcher.state_cache.lease(gi) as state:
+                codes = seal_segment(cfg, g, vecs, state=state)
+        gd.sealed.append(SealedSegment(ids=ids, vectors=vecs, codes=codes))
+        self.stats.n_seals += 1
+        auto = self.batcher.cfg.auto_compact_segments
+        if auto is not None and len(gd.sealed) >= auto:
+            self._compact_group(gi)
+
+    # ---------------------------------------------------------- compaction
+
+    def compact(self, group: int | None = None) -> int:
+        """Compact sealed segments into the main state(s); returns rows.
+
+        ``group=None`` sweeps every group.  Open (unsealed) memtables are
+        sealed first, so an explicit ``compact()`` is a full flush.
+        """
+        gis = (
+            [int(group)] if group is not None
+            else list(range(self.batcher.plan.n_groups))
+        )
+        total = 0
+        for gi in gis:
+            self.seal(gi)
+            total += self._compact_group(gi)
+        return total
+
+    def compact_sealed(self) -> int:
+        """Compact only the already-sealed backlog (the background path).
+
+        Open memtables are left to fill toward their seal threshold, and
+        groups whose reserved capacity cannot take their backlog are
+        skipped (they keep serving by exact scan) instead of raising —
+        this is the safe form the async frontend's idle poll calls.
+        """
+        return sum(
+            self._compact_group(gi, strict=False)
+            for gi in range(self.batcher.plan.n_groups)
+        )
+
+    def _compact_group(self, gi: int, strict: bool = True) -> int:
+        """One compaction transaction: splice sealed rows, bump version."""
+        gd = self._groups[gi]
+        if not gd.sealed:
+            return 0
+        cfg = self.batcher.group_config(gi)
+        ids = np.concatenate([s.ids for s in gd.sealed])
+        vecs = np.concatenate([s.vectors for s in gd.sealed])
+        codes = np.concatenate([s.codes for s in gd.sealed])
+        rows_now = self.base_n + len(gd.compacted_ids)
+        if rows_now + len(ids) > cfg.n:
+            if not strict:
+                return 0
+            raise ValueError(
+                f"group {gi} compaction needs {rows_now + len(ids)} rows "
+                f"but the state capacity is {cfg.n}; raise "
+                f"ServiceConfig.delta_reserve_rows"
+            )
+        cache = self.batcher.state_cache
+        with cache.lease(gi) as state:
+            assert int(state.n_valid) == rows_now, "append log out of sync"
+            new_state = append_to_state(
+                state, codes, vecs, mesh=self.batcher.mesh
+            )
+        cache.replace(gi, new_state)  # versioned: only this group's bytes
+        gd.compacted_ids = np.concatenate([gd.compacted_ids, ids])
+        gd.compacted_vecs.append(vecs)
+        gd.compacted_codes.append(codes)
+        gd.sealed.clear()
+        self.stats.n_compactions += 1
+        self.stats.n_rows_compacted += len(ids)
+        self.batcher.plan = self.batcher.plan.bumped(len(ids))
+        return len(ids)
+
+    def compacted_rows(
+        self, gi: int
+    ) -> tuple[np.ndarray | None, np.ndarray | None]:
+        """(vectors, sealed codes) of rows already absorbed by group ``gi``.
+
+        The cold-rebuild feed: ``Batcher._build_state`` appends these to
+        the base corpus so a discard-mode eviction can never lose
+        streamed rows.  ``(None, None)`` when nothing was compacted.
+        """
+        gd = self._groups[int(gi)]
+        if not len(gd.compacted_ids):
+            return None, None
+        return (
+            np.concatenate(gd.compacted_vecs),
+            np.concatenate(gd.compacted_codes),
+        )
+
+    # --------------------------------------------------------------- reads
+
+    def pending_rows(self, gi: int) -> int:
+        """Uncompacted (open + sealed) rows buffered for group ``gi``."""
+        return self._groups[int(gi)].n_pending
+
+    def augment(self, gi, queries, weight_ids, ids, dists):
+        """Fold the group's delta state into one launch's indexed hits.
+
+        Translates appended state rows to global ids, scans the group's
+        pending rows exactly under each query's own weight, and merges
+        under the tombstone filter.  With nothing pending and no
+        tombstones the indexed results pass through bit-exactly.
+        """
+        gi = int(gi)
+        gd = self._groups[gi]
+        translated = ids
+        if len(gd.compacted_ids):
+            t = np.asarray(ids, np.int64).copy()
+            m = t >= self.base_n
+            if m.any():
+                t[m] = gd.compacted_ids[t[m] - self.base_n]
+            translated = t
+        if not gd.n_pending and not self.tombstones:
+            if translated is ids:
+                return ids, dists
+            return translated.astype(np.int32), dists
+        k = self.batcher.cfg.k
+        plan = self.batcher.plan
+        if gd.n_pending:
+            d_ids, d_vecs = gd.pending_rows()
+            q_w = plan.weights[
+                np.asarray(weight_ids, np.int64)
+            ].astype(np.float32)
+            extra_ids, extra_d = scan_topk(
+                queries, q_w, d_ids, d_vecs, plan.p, k
+            )
+            self.stats.n_delta_scans += 1
+        else:
+            nq = len(np.atleast_2d(queries))
+            extra_ids = np.full((nq, 0), -1, np.int64)
+            extra_d = np.full((nq, 0), np.inf, np.float32)
+        return merge_topk(
+            translated, dists, extra_ids, extra_d, k, drop=self.tombstones
+        )
+
+    def summary(self) -> dict:
+        """Flat streaming report: counters, backlog, plan lineage."""
+        plan = self.batcher.plan
+        return dict(
+            n_inserts=self.stats.n_inserts,
+            n_deletes=self.stats.n_deletes,
+            n_seals=self.stats.n_seals,
+            n_compactions=self.stats.n_compactions,
+            n_rows_compacted=self.stats.n_rows_compacted,
+            n_delta_scans=self.stats.n_delta_scans,
+            n_pending=sum(g.n_pending for g in self._groups.values()),
+            n_sealed_segments=sum(
+                len(g.sealed) for g in self._groups.values()
+            ),
+            n_tombstones=len(self.tombstones),
+            plan_version=plan.version,
+            corpus_epoch=plan.corpus_epoch,
+        )

@@ -143,6 +143,36 @@ class RetrievalService:
         """Unweighted mean batch occupancy over groups that served traffic."""
         return self.batcher.mean_occupancy()
 
+    # ------------------------------------------------------------- streaming
+
+    def insert(self, vector, weight_id) -> int:
+        """Insert one vector into ``weight_id``'s table group.
+
+        Returns the assigned global point id.  The row is queryable
+        immediately (exact delta scan) and is absorbed into the group's
+        compiled state by a later compaction.  Requires
+        ``ServiceConfig.delta_reserve_rows`` capacity for that compaction
+        to have somewhere to append.
+        """
+        return self.batcher.insert(vector, weight_id)
+
+    def delete(self, point_id: int) -> None:
+        """Tombstone a global point id; it never appears in results again."""
+        self.batcher.delete(point_id)
+
+    def compact(self, group: int | None = None) -> int:
+        """Flush and compact delta segments into the main group state(s).
+
+        Returns the number of rows absorbed.  Only the compacted groups'
+        cached states are invalidated (at a bumped version); compiled
+        query steps are untouched.
+        """
+        return self.batcher.compact(group)
+
+    def delta_summary(self) -> dict:
+        """Streaming counters (inserts/seals/compactions/tombstones)."""
+        return self.batcher.delta_summary()
+
     # --------------------------------------------------------------- serving
 
     def query(self, queries: np.ndarray, weight_ids) -> RetrievalResult:

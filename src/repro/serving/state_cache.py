@@ -20,6 +20,11 @@ plus vectors ``(n, d)`` — dominates the serving footprint.  Keeping every
   pin       an acquired state is pinned until ``release`` — a launch in
             flight can never lose its state to a concurrent acquire, and
             deadline-driven partial launches cannot thrash each other
+  version   keys are versioned: streaming compaction replaces or
+            invalidates exactly one group's cached bytes (``replace`` /
+            ``invalidate`` bump that group's version and drop its device
+            and host copies) while every other group's state — and every
+            compiled step — survives untouched
 
 Byte accounting comes from ``IndexConfig.state_nbytes`` (the *padded*
 shapes actually materialized), so budgets are enforceable before any state
@@ -51,6 +56,7 @@ class CacheStats:
     n_builds: int = 0  # cold miss: state built from scratch
     n_restores: int = 0  # warm miss: host copy uploaded
     n_evictions: int = 0  # device evictions (offloaded or discarded)
+    n_invalidations: int = 0  # version bumps (compaction replace/invalidate)
 
     @property
     def n_misses(self) -> int:
@@ -70,6 +76,7 @@ class CacheStats:
             n_builds=self.n_builds,
             n_restores=self.n_restores,
             n_evictions=self.n_evictions,
+            n_invalidations=self.n_invalidations,
             hit_rate=self.hit_rate,
         )
 
@@ -82,6 +89,7 @@ class _Entry:
     host: object | None = None  # offloaded host copy
     nbytes: int = 0
     pins: int = 0
+    version: int = 0  # group version the stored bytes correspond to
 
 
 class StateCache:
@@ -148,6 +156,10 @@ class StateCache:
         self._resident: OrderedDict[int, _Entry] = OrderedDict()
         self._resident_nbytes = 0  # running sum over self._resident
         self._offloaded: dict[int, _Entry] = {}
+        # versioned keys: cached bytes (device or host) are only valid for
+        # the group's current version; invalidate/replace bump it so a
+        # compacted group can never serve a pre-compaction copy
+        self._versions: dict[int, int] = {}
         self.stats = CacheStats()
 
     # ------------------------------------------------------------- inspection
@@ -175,6 +187,10 @@ class StateCache:
         entry = self._resident.get(int(gi))
         return entry.pins if entry is not None else 0
 
+    def version_of(self, gi: int) -> int:
+        """Current version of group ``gi`` (bumped by invalidate/replace)."""
+        return self._versions.get(int(gi), 0)
+
     def reset_stats(self) -> None:
         """Zero the hit/build/restore/eviction counters."""
         self.stats = CacheStats()
@@ -192,14 +208,20 @@ class StateCache:
         residency — never exceeded transiently by the incoming group.
         """
         gi = int(gi)
+        version = self.version_of(gi)
         entry = self._resident.get(gi)
-        if entry is not None:
+        if entry is not None and entry.version == version:
             self._resident.move_to_end(gi)
             entry.pins += 1
             self.stats.n_hits += 1
             self._on_event(gi, "hit")
             return entry.state
+        if entry is not None:  # stale resident copy (defensive: invalidate
+            self.evict(gi)  # and replace already drop these eagerly)
         entry = self._offloaded.get(gi)
+        if entry is not None and entry.version != version:
+            del self._offloaded[gi]
+            entry = None
         nbytes = entry.nbytes if entry is not None else self._nbytes_of(gi)
         self._evict_to_fit(nbytes)
         if entry is not None:
@@ -212,7 +234,9 @@ class StateCache:
             self.stats.n_restores += 1
             kind = "restore"
         else:
-            entry = _Entry(state=self._build(gi), nbytes=nbytes)
+            entry = _Entry(
+                state=self._build(gi), nbytes=nbytes, version=version
+            )
             self.stats.n_builds += 1
             kind = "build"
         entry.pins += 1
@@ -287,3 +311,63 @@ class StateCache:
         """Drop every unpinned resident state (keeping host copies)."""
         for gi in [g for g, e in self._resident.items() if e.pins == 0]:
             self.evict(gi)
+
+    # ------------------------------------------------------------ versioning
+
+    def invalidate(self, gi: int) -> None:
+        """Bump group ``gi``'s version and drop every cached copy of it.
+
+        The compaction-driven invalidation path: the group's stored bytes
+        (device state *and* host offload copy) no longer describe its
+        corpus, so both are discarded and the next ``acquire`` cold-builds
+        at the new version.  Only this group is touched — other groups'
+        cached states and every compiled step survive.  Raises while the
+        group is pinned (a launch in flight must never lose its state).
+        """
+        gi = int(gi)
+        entry = self._resident.get(gi)
+        if entry is not None:
+            if entry.pins:
+                raise ValueError(f"cannot invalidate pinned group {gi}")
+            del self._resident[gi]
+            self._resident_nbytes -= entry.nbytes
+            entry.state = None
+        self._offloaded.pop(gi, None)
+        self._versions[gi] = self.version_of(gi) + 1
+        self.stats.n_invalidations += 1
+        self._on_event(gi, "invalidate")
+
+    def replace(self, gi: int, state: object, nbytes: int | None = None
+                ) -> None:
+        """Install ``state`` as group ``gi``'s new current version.
+
+        The in-place compaction path: the caller has already produced the
+        post-compaction state (``append_to_state`` on the leased old one),
+        so instead of invalidate-then-rebuild the new state is installed
+        directly at a bumped version — one version event, no cold build.
+        Stale host copies are dropped; residency budgets are re-enforced
+        against the (possibly re-priced) entry.  Raises while pinned.
+        """
+        gi = int(gi)
+        entry = self._resident.get(gi)
+        if entry is not None and entry.pins:
+            raise ValueError(f"cannot replace pinned group {gi}")
+        if entry is None:
+            if nbytes is None:
+                nbytes = self._nbytes_of(gi)
+            self._evict_to_fit(nbytes)
+            entry = _Entry(nbytes=nbytes)
+            self._resident[gi] = entry
+            self._resident_nbytes += nbytes
+        elif nbytes is not None:
+            self._resident_nbytes += nbytes - entry.nbytes
+            entry.nbytes = nbytes
+        self._offloaded.pop(gi, None)
+        self._versions[gi] = self.version_of(gi) + 1
+        entry.version = self._versions[gi]
+        entry.state = state
+        entry.host = None
+        self._resident.move_to_end(gi)
+        self.stats.n_invalidations += 1
+        self._on_event(gi, "invalidate")
+        self._enforce_budget()

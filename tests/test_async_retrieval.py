@@ -276,3 +276,63 @@ def test_async_launcher_runs():
     assert rep["n_launched_full"] + rep["n_launched_deadline"] >= 1
     # every wait is bounded by the deadline budget
     assert rep["p95_wait_ms"] <= rep["max_delay_ms"] + 1e-6
+
+
+# --------------------------------------------------------- backpressure
+
+
+def test_submit_raises_overloaded_at_max_pending(tiny):
+    """ServiceConfig.max_pending bounds per-group pending buffers: the
+    overflowing submit raises a typed Overloaded (with the observed
+    depth) *before* enqueueing, and capacity freed by poll()/drain()
+    accepts new submissions again."""
+    from repro.serving import Overloaded
+
+    data, weights, plan, svc = tiny
+    bounded = RetrievalService(
+        plan, data,
+        cfg=ServiceConfig(k=3, q_batch=8, max_delay_ms=MAX_DELAY_MS,
+                          max_pending=2),
+    )
+    clock = ManualClock()
+    asvc = AsyncRetrievalService(bounded, clock=clock)
+    gi, qpts, wids = _one_group_traffic(data, plan, 4)
+    futs = [asvc.submit(qpts[i], wids[i]) for i in range(2)]
+    with pytest.raises(Overloaded) as err:
+        asvc.submit(qpts[2], wids[2])
+    assert err.value.group_id == gi
+    assert err.value.depth == 2 and err.value.max_pending == 2
+    # the rejected request was never enqueued and no future was resolved
+    assert asvc.pending_count == 2
+    assert not any(f.done() for f in futs)
+    # deadline expiry drains the buffer; the retry is accepted
+    clock.advance(MAX_DELAY_MS / 1e3 + 1e-4)
+    assert asvc.poll() == 1
+    assert all(f.done() for f in futs)
+    fut = asvc.submit(qpts[2], wids[2])
+    assert asvc.pending_count == 1
+    asvc.drain()
+    assert fut.done()
+
+
+def test_max_pending_transparent_for_fill_launched_traffic(tiny):
+    """A cap at q_batch never fires on well-batched traffic: fill
+    launches drain the buffer before it can overflow, and answers stay
+    bit-exact with the unbounded frontend."""
+    data, weights, plan, svc = tiny
+    bounded = RetrievalService(
+        plan, data,
+        cfg=ServiceConfig(k=3, q_batch=QB, max_delay_ms=MAX_DELAY_MS,
+                          max_pending=QB),
+    )
+    qpts, wids, arrivals = _mixed_traffic(data, weights, 24, seed=77)
+    ref, _ = replay_open_loop(
+        AsyncRetrievalService(svc, clock=ManualClock()),
+        qpts, wids, arrivals,
+    )
+    got, _ = replay_open_loop(
+        AsyncRetrievalService(bounded, clock=ManualClock()),
+        qpts, wids, arrivals,
+    )
+    np.testing.assert_array_equal(got.ids, ref.ids)
+    np.testing.assert_array_equal(got.stop_levels, ref.stop_levels)

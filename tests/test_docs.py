@@ -36,8 +36,10 @@ DOCSTRING_SCOPE = [
     "src/repro/serving/retrieval.py",
     "src/repro/serving/async_service.py",
     "src/repro/serving/state_cache.py",
+    "src/repro/serving/delta.py",
     "src/repro/serving/decode.py",
     "src/repro/core/serving_plan.py",
+    "src/repro/index/streaming.py",
 ]
 
 # quickstart smoke: same flags as documented, shrunk to a tiny corpus
@@ -127,6 +129,17 @@ def test_readme_paging_flags_documented_and_valid():
     with pytest.raises(Exception):
         parse_bytes("1.5")  # ditto — would silently mean 1 byte
     assert parse_bytes("1.5GB") == int(1.5 * (1 << 30))
+    # case-insensitive + IEC suffixes, clear rejection of negatives
+    assert parse_bytes("512mb") == 512 * 2**20
+    assert parse_bytes("512MiB") == 512 * 2**20
+    assert parse_bytes("2gib") == 2 << 30
+    assert parse_bytes("1KiB") == 1024
+    with pytest.raises(Exception, match="positive"):
+        parse_bytes("-512MB")
+    with pytest.raises(Exception, match="positive"):
+        parse_bytes("0")
+    with pytest.raises(Exception, match="unit"):
+        parse_bytes("512XB")
 
 
 def test_readme_documents_install_and_tier1_verify():
@@ -149,7 +162,9 @@ def test_docs_cross_links():
     for anchor in ("serving_plan.py", "QueryStepCache", "StateCache",
                    "batching.py", "RetrievalService",
                    "AsyncRetrievalService", "launch/retrieval.py",
-                   "state_nbytes", "max_resident_groups"):
+                   "state_nbytes", "max_resident_groups",
+                   "DeltaIndex", "delta_seal_rows", "append_to_state",
+                   "n_valid"):
         assert anchor in arch, f"ARCHITECTURE.md lost its {anchor} coverage"
 
 

@@ -169,12 +169,131 @@ def test_cache_validation():
         cache.release(0)  # release without acquire
 
 
+def test_invalidate_drops_device_and_host_copies():
+    """Compaction-driven invalidation: the group's resident state *and*
+    its host offload copy are discarded at a bumped version, so the next
+    acquire cold-builds; nothing else is touched."""
+    log = []
+    cache = _fake_cache(cap=1, log=log)
+    with cache.lease(0):
+        pass
+    with cache.lease(1):  # evicts 0 to its host copy
+        pass
+    assert cache.version_of(0) == 0
+    cache.invalidate(0)
+    assert cache.version_of(0) == 1
+    assert cache.stats.n_invalidations == 1
+    with cache.lease(0):  # host copy gone: cold build, not restore
+        pass
+    assert cache.stats.n_restores == 0
+    assert cache.stats.n_builds == 3
+    assert (0, "invalidate") in log
+    # the resident variant: invalidating a resident group frees its slot
+    cache.invalidate(0)
+    assert not cache.is_resident(0)
+    assert cache.version_of(0) == 2
+
+
+def test_replace_installs_new_state_at_bumped_version():
+    cache = _fake_cache(cap=2)
+    with cache.lease(0):
+        pass
+    cache.replace(0, ("dev", "compacted-0"))
+    assert cache.version_of(0) == 1
+    assert cache.stats.n_invalidations == 1
+    with cache.lease(0) as state:  # hit: the replaced state serves
+        assert state == ("dev", "compacted-0")
+    assert cache.stats.n_hits == 1 and cache.stats.n_builds == 1
+    # replace of a non-resident group installs it (and evicts LRU to fit)
+    with cache.lease(1):
+        pass
+    with cache.lease(2):
+        pass
+    cache.replace(3, ("dev", "compacted-3"))
+    assert cache.is_resident(3) and cache.n_resident == 2
+
+
+def test_invalidate_and_replace_refuse_pinned_groups():
+    cache = _fake_cache()
+    cache.acquire(0)
+    with pytest.raises(ValueError):
+        cache.invalidate(0)
+    with pytest.raises(ValueError):
+        cache.replace(0, ("dev", "new"))
+    cache.release(0)
+    cache.invalidate(0)  # unpinned: fine
+
+
+def test_stale_offload_copy_is_never_restored():
+    """A host copy whose version lags the group's current version must be
+    dropped, not restored (defense in depth behind eager invalidation)."""
+    cache = _fake_cache(cap=1)
+    with cache.lease(0):
+        pass
+    with cache.lease(1):  # 0 offloaded at version 0
+        pass
+    cache._versions[0] = 7  # simulate an out-of-band version bump
+    with cache.lease(0):
+        pass
+    assert cache.stats.n_restores == 0  # stale copy discarded
+    assert cache.stats.n_builds == 3
+
+
 @st.composite
 def _access_trace(draw):
     """Arbitrary group access sequence plus a residency cap."""
     ops = draw(st.lists(st.integers(0, 5), min_size=1, max_size=60))
     cap = draw(st.integers(1, 4))
     return ops, cap
+
+
+@st.composite
+def _versioned_trace(draw):
+    """Interleaved accesses and compaction-driven invalidations."""
+    ops = draw(st.lists(
+        st.tuples(st.sampled_from(["lease", "invalidate", "replace"]),
+                  st.integers(0, 3)),
+        min_size=1, max_size=60,
+    ))
+    cap = draw(st.integers(1, 3))
+    return ops, cap
+
+
+@given(_versioned_trace())
+@settings(max_examples=100, deadline=None)
+def test_versioned_counter_invariants_property(trace):
+    """Under arbitrary interleavings of leases, invalidations and
+    replaces: every acquire after a version bump rebuilds (never serves
+    stale bytes), versions grow monotonically, and the counter identity
+    hits + builds + restores == leases holds with n_invalidations equal
+    to the version-bump count."""
+    ops, cap = trace
+    cache = _fake_cache(cap=cap)
+    versions = {gi: 0 for gi in range(4)}
+    expected = {gi: ("dev", gi) for gi in range(4)}  # current payload
+    n_leases = n_bumps = 0
+    for op, gi in ops:
+        if op == "lease":
+            with cache.lease(gi) as state:
+                assert state == expected[gi]
+            n_leases += 1
+        elif op == "invalidate":
+            versions[gi] += 1
+            n_bumps += 1
+            cache.invalidate(gi)
+            assert not cache.is_resident(gi)
+            expected[gi] = ("dev", gi)  # next acquire cold-builds
+        else:
+            versions[gi] += 1
+            n_bumps += 1
+            expected[gi] = ("dev", gi, versions[gi])
+            cache.replace(gi, expected[gi])
+            assert cache.is_resident(gi)
+        assert cache.version_of(gi) == versions[gi]
+    s = cache.stats
+    assert s.n_hits + s.n_builds + s.n_restores == n_leases
+    assert s.n_invalidations == n_bumps
+    assert all(cache.version_of(g) == versions[g] for g in versions)
 
 
 @given(_access_trace())
