@@ -195,6 +195,7 @@ def build_group_state(
     *,
     extra_points: np.ndarray | None = None,
     extra_codes: np.ndarray | None = None,
+    base_rows: np.ndarray | None = None,
 ) -> QueryState:
     """Materialize one table group's QueryState from its serving plan.
 
@@ -216,6 +217,10 @@ def build_group_state(
       the host-code path (``seal_segment`` output, already at ``cfg.beta``
       columns).  The result is bit-exact with a state that reached the
       same rows through ``append_to_state``.
+    * ``base_rows`` restricts the base corpus to those row indices (in
+      that order) before the extra rows are appended — the tombstone-purge
+      rebuild path: purged rows simply never enter the state, and the
+      plan's host codes are row-sliced to match.  None keeps every row.
     """
     folded = gplan.folded()
     proj = pad_cols(folded["proj"], cfg.beta)
@@ -228,6 +233,9 @@ def build_group_state(
     rep0 = NamedSharding(mesh, P())
 
     points = np.ascontiguousarray(points, dtype=np.float32)
+    if base_rows is not None:
+        base_rows = np.asarray(base_rows, np.int64)
+        points = np.ascontiguousarray(points[base_rows])
     if extra_points is not None and len(extra_points):
         extra_points = np.ascontiguousarray(extra_points, dtype=np.float32)
         points = np.concatenate([points, extra_points], axis=0)
@@ -239,7 +247,10 @@ def build_group_state(
     pad_rows = cfg.n - n_rows
 
     if gplan.codes is not None:
-        codes_np = pad_cols(gplan.codes, cfg.beta).astype(np.int32)
+        base_codes = gplan.codes
+        if base_rows is not None:
+            base_codes = base_codes[base_rows]
+        codes_np = pad_cols(base_codes, cfg.beta).astype(np.int32)
         if extra_codes is not None and len(extra_codes):
             if extra_codes.shape[1] != cfg.beta:
                 raise ValueError(

@@ -24,6 +24,13 @@ Steps:
               when it fills or when the oldest request has waited
               ``--max-delay-ms``.  Both frontends are bit-exact on
               identical traffic.
+              ``--driver`` steps the replay through the real-time
+              ServiceDriver (deadline-miss accounting, cost-aware
+              eviction, idle-tick background compaction); ``--prefetch``
+              additionally issues predictive state prefetches from the
+              pending-deadline schedule, so restores overlap launches
+              instead of blocking them.  Answers stay bit-exact either
+              way.
               ``--insert-rate`` turns either mode into a mixed read/write
               replay: that fraction of the op stream becomes streaming
               inserts (delta memtable -> sealed segments at
@@ -57,6 +64,11 @@ from ..serving.async_service import (
     replay_open_loop,
 )
 from ..serving.retrieval import RetrievalService, ServiceConfig
+from ..serving.scheduler import (
+    DeadlinePrefetch,
+    ServiceDriver,
+    replay_with_driver,
+)
 
 __all__ = ["parse_bytes", "run", "main"]
 
@@ -103,6 +115,43 @@ def parse_bytes(text: str) -> int:
             f"byte size {text!r} is under 1 byte"
         )
     return nbytes
+
+
+def _make_driver(args, asvc) -> ServiceDriver | None:
+    """A ServiceDriver over ``asvc`` per the CLI flags (None = undriven)."""
+    if not args.driver:
+        return None
+    return ServiceDriver(
+        asvc,
+        prefetch=DeadlinePrefetch() if args.prefetch else None,
+    )
+
+
+def _print_driver_report(driver: ServiceDriver) -> None:
+    """One-line scheduler report: ticks, launches, misses, prefetches."""
+    d = driver.stats
+    miss = (f"{d.deadline_miss_rate:.2f}"
+            if d.n_deadlines_due else "n/a")
+    print(f"driver: {d.n_ticks} ticks -> {d.n_launches} launches, "
+          f"deadline-miss rate {miss} "
+          f"({d.n_deadline_misses}/{d.n_deadlines_due}), "
+          f"{d.n_prefetches_issued} prefetches issued, "
+          f"{d.n_idle_compactions} idle compactions")
+
+
+def _print_cache_report(cache: dict) -> None:
+    """State-cache report: residency, utilization, paging + prefetch work."""
+    util = (f", budget {cache['budget_utilization']:.0%} used"
+            if cache["device_budget_bytes"] else "")
+    print(f"state cache: {cache['n_resident']}/{cache['n_groups']} "
+          f"resident ({cache['resident_bytes'] / 2**20:.1f} MiB{util}), "
+          f"hit rate {cache['hit_rate']:.2f}, "
+          f"{cache['n_evictions']} evictions, "
+          f"{cache['n_restores']} restores, "
+          f"{cache['n_builds']} rebuilds, "
+          f"{cache['n_prefetches']} prefetches "
+          f"({cache['n_restore_overlapped']} overlapped restores, "
+          f"{cache['n_prefetch_wasted']} wasted)")
 
 
 def run(args) -> dict:
@@ -169,8 +218,12 @@ def run(args) -> dict:
             rng.exponential(1.0 / args.arrival_rate, args.n_queries)
         )
         asvc = AsyncRetrievalService(svc, clock=ManualClock())
+        driver = _make_driver(args, asvc)
         t0 = time.time()
-        res, waits = replay_open_loop(asvc, qpts, wids, arrivals)
+        if driver is not None:
+            res, waits = replay_with_driver(driver, qpts, wids, arrivals)
+        else:
+            res, waits = replay_open_loop(asvc, qpts, wids, arrivals)
         t_serve = time.time() - t0
         wait_ms = 1e3 * waits if len(waits) else np.array([np.nan])
         async_report = {
@@ -180,6 +233,7 @@ def run(args) -> dict:
             "p95_wait_ms": float(np.percentile(wait_ms, 95)),
             "n_launched_full": asvc.n_launched_full,
             "n_launched_deadline": asvc.n_launched_deadline,
+            "driver": driver.stats.summary() if driver is not None else None,
         }
         print(f"serve[async]: {args.n_queries} queries at "
               f"{args.arrival_rate:.0f} q/s open-loop, deadline "
@@ -189,6 +243,8 @@ def run(args) -> dict:
               f"mean {wait_ms.mean():.2f} ms / p95 "
               f"{np.percentile(wait_ms, 95):.2f} ms "
               f"({args.n_queries / t_serve:.1f} q/s compute)")
+        if driver is not None:
+            _print_driver_report(driver)
     else:
         t0 = time.time()
         res = svc.query(qpts, wids)
@@ -205,13 +261,9 @@ def run(args) -> dict:
               f"mean stop level {s['mean_stop_level']:.1f}, "
               f"mean checked {s['mean_n_checked']:.0f}")
     cache = svc.cache_summary()
-    if args.max_resident_groups is not None or args.device_budget is not None:
-        print(f"state cache: {cache['n_resident']}/{cache['n_groups']} "
-              f"resident ({cache['resident_bytes'] / 2**20:.1f} MiB), "
-              f"hit rate {cache['hit_rate']:.2f}, "
-              f"{cache['n_evictions']} evictions, "
-              f"{cache['n_restores']} restores, "
-              f"{cache['n_builds']} rebuilds")
+    if (args.max_resident_groups is not None
+            or args.device_budget is not None or args.driver):
+        _print_cache_report(cache)
 
     n_bad = 0
     if args.check:
@@ -259,9 +311,12 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
     ).astype(np.float32)
     inserted = []  # (pid, vector, weight_id)
     n_compiled0 = svc.step_cache.n_compiled
+    driver = None
     t0 = time.time()
     if args.use_async:
         asvc = AsyncRetrievalService(svc, clock=ManualClock())
+        driver = _make_driver(args, asvc)
+        tick = asvc.poll if driver is None else driver.step
         arrivals = np.cumsum(
             rng.exponential(1.0 / args.arrival_rate, n_ops)
         )
@@ -271,8 +326,13 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
                 if nd is None or nd > arrivals[i]:
                     break
                 asvc.clock.advance_to(nd)
-                asvc.poll()
+                tick()
             asvc.clock.advance_to(arrivals[i])
+            if driver is not None:
+                # arrival tick: gives prefetch its lead time (never
+                # launches — due deadlines were fired above), exactly
+                # like replay_with_driver
+                driver.step()
             if is_insert[i]:
                 pid = asvc.insert(ins_vecs[i], int(wids[i]))
                 inserted.append((pid, ins_vecs[i], int(wids[i])))
@@ -280,7 +340,9 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
                 asvc.submit(qpts[i], wids[i])
         while asvc.pending_count:
             asvc.clock.advance_to(asvc.next_deadline())
-            asvc.poll()
+            tick()
+        if driver is not None:
+            _print_driver_report(driver)
     else:
         for i in range(n_ops):
             if is_insert[i]:
@@ -330,6 +392,7 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
         "delta": svc.delta_summary(),
         "n_check_failures": n_bad,
         "async": None,
+        "driver": driver.stats.summary() if driver is not None else None,
     }
 
 
@@ -360,6 +423,14 @@ def parse_args(argv=None):
                          "requests are replayed open-loop at --arrival-rate "
                          "and a batch launches when it fills or its oldest "
                          "request has waited --max-delay-ms")
+    ap.add_argument("--driver", action="store_true",
+                    help="step the --async replay through the real-time "
+                         "ServiceDriver (deadline-miss accounting, "
+                         "cost-aware eviction, idle-tick compaction)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="with --driver: predictively prefetch group "
+                         "states from the pending-deadline schedule so "
+                         "restores overlap launches")
     ap.add_argument("--max-delay-ms", type=float, default=2.0,
                     help="async deadline budget: a partial batch launches "
                          "once its oldest request has waited this long")
@@ -389,6 +460,10 @@ def parse_args(argv=None):
     args = ap.parse_args(argv)
     if not 0.0 <= args.insert_rate <= 1.0:
         ap.error(f"--insert-rate must be in [0, 1], got {args.insert_rate}")
+    if args.driver and not args.use_async:
+        ap.error("--driver drives the async frontend; add --async")
+    if args.prefetch and not args.driver:
+        ap.error("--prefetch is a ServiceDriver feature; add --driver")
     return args
 
 

@@ -2,7 +2,9 @@
 
 Sync + async weight-routed frontends over a shared batching core, group
 states paged through a budgeted ``StateCache``, streaming inserts/deletes
-through the ``DeltaIndex`` subsystem, plus the LM decode loop/samplers.
+through the ``DeltaIndex`` subsystem, a real-time ``ServiceDriver`` with
+predictive prefetch and cost-aware eviction, plus the LM decode
+loop/samplers.
 """
 
 from .async_service import (
@@ -23,7 +25,17 @@ from .batching import (
 )
 from .decode import SamplerConfig, generate, make_serve_step
 from .delta import DeltaIndex, DeltaStats
-from .state_cache import CacheStats, StateCache
+from .scheduler import (
+    CostAwareEviction,
+    DeadlinePrefetch,
+    DriverStats,
+    EvictionPolicy,
+    LRUEviction,
+    PrefetchPolicy,
+    ServiceDriver,
+    replay_with_driver,
+)
+from .state_cache import CacheStats, EvictionCandidate, StateCache
 from .retrieval import (
     GroupServeStats,
     RetrievalResult,
@@ -36,17 +48,25 @@ __all__ = [
     "BatchPlan",
     "Batcher",
     "CacheStats",
+    "CostAwareEviction",
+    "DeadlinePrefetch",
     "DeltaIndex",
     "DeltaStats",
+    "DriverStats",
+    "EvictionCandidate",
+    "EvictionPolicy",
     "GroupServeStats",
+    "LRUEviction",
     "ManualClock",
     "Overloaded",
+    "PrefetchPolicy",
     "QueryAnswer",
     "QueryFuture",
     "RetrievalResult",
     "RetrievalService",
     "SamplerConfig",
     "ServiceConfig",
+    "ServiceDriver",
     "StateCache",
     "coalesce",
     "generate",
@@ -54,5 +74,6 @@ __all__ = [
     "merge_topk",
     "pad_take",
     "replay_open_loop",
+    "replay_with_driver",
     "run_plans",
 ]

@@ -185,6 +185,10 @@ class AsyncRetrievalService:
         # group states, capacity permitting — the single-threaded analog
         # of a background compaction thread
         self.compact_on_idle = bool(compact_on_idle)
+        # a scheduler.ServiceDriver that has taken ownership of idle-time
+        # work (background compaction) and wants submit wake-ups; None =
+        # undriven (poll() keeps compacting on idle ticks itself)
+        self.driver = None
         self._pending: dict[int, collections.deque[_Pending]] = (
             collections.defaultdict(collections.deque)
         )
@@ -207,6 +211,18 @@ class AsyncRetrievalService:
             for q in self._pending.values() if q
         ]
         return min(deadlines) if deadlines else None
+
+    def pending_depths(self) -> dict[int, tuple[int, float]]:
+        """Per-group ``(depth, oldest_deadline)`` over non-empty buffers.
+
+        The scheduler's view of the pending schedule: a deadline is a
+        launch time, so the prefetch policy reads this to decide which
+        group states to bring on device ahead of their launches.
+        """
+        return {
+            gi: (len(q), min(r.deadline for r in q))
+            for gi, q in self._pending.items() if q
+        }
 
     # ---------------------------------------------------------------- serving
 
@@ -249,6 +265,8 @@ class AsyncRetrievalService:
                 if q and q[-1] is pend:
                     q.pop()
                 raise
+        if self.driver is not None:
+            self.driver.notify_submit()  # wake a sleeping driver thread
         return fut
 
     def poll(self, now: float | None = None) -> int:
@@ -258,6 +276,9 @@ class AsyncRetrievalService:
         launched) additionally compacts the streaming delta's sealed
         backlog when ``compact_on_idle`` is set — background compaction
         rides the event loop's quiet ticks, never delaying a launch.
+        With a ``scheduler.ServiceDriver`` attached, idle-time work is
+        the driver's (its ticks call ``idle_work`` themselves), so an
+        undriven ``poll`` no longer compacts.
         """
         if now is None:
             now = self.clock()
@@ -267,11 +288,21 @@ class AsyncRetrievalService:
             if q and min(r.deadline for r in q) <= now:
                 self._launch(gi, "deadline")
                 n += 1
-        if n == 0 and self.compact_on_idle and (
-            self.batcher.delta is not None
-        ):
-            self.batcher.delta.compact_sealed()
+        if n == 0 and self.driver is None:
+            self.idle_work()
         return n
+
+    def idle_work(self) -> int:
+        """One slice of idle-time background work (sealed compaction).
+
+        Compacts the streaming delta's *sealed* backlog when
+        ``compact_on_idle`` is set, returning the rows absorbed.  Called
+        by an undriven idle ``poll()``, or by the ``ServiceDriver``'s
+        idle ticks once one owns the service.
+        """
+        if self.compact_on_idle and self.batcher.delta is not None:
+            return self.batcher.delta.compact_sealed()
+        return 0
 
     # ------------------------------------------------------------- streaming
 
@@ -288,9 +319,12 @@ class AsyncRetrievalService:
         """Tombstone a global point id; it never appears in results again."""
         self.batcher.delete(point_id)
 
-    def compact(self, group: int | None = None) -> int:
-        """Flush and compact delta segments (see ``Batcher.compact``)."""
-        return self.batcher.compact(group)
+    def compact(self, group: int | None = None, purge: bool = False) -> int:
+        """Flush and compact delta segments (see ``Batcher.compact``).
+
+        ``purge=True`` runs the tombstone-purging rebuild.
+        """
+        return self.batcher.compact(group, purge=purge)
 
     def drain(self) -> int:
         """Flush all pending buffers regardless of deadline."""
@@ -331,23 +365,20 @@ class AsyncRetrievalService:
             ), now)
 
 
-def replay_open_loop(svc: AsyncRetrievalService, queries, weight_ids,
-                     arrivals):
-    """Open-loop trace replay on a ManualClock (virtual time).
+def _replay(svc: AsyncRetrievalService, queries, weight_ids, arrivals,
+            tick, tick_at_arrivals: bool = False):
+    """Shared open-loop replay core (``replay_open_loop`` and the
+    scheduler's ``replay_with_driver`` parameterize only the tick).
 
-    ``arrivals`` are absolute non-decreasing virtual times, one per query;
-    each request is submitted alone at its arrival (the open-loop regime
-    serve_bench sweep 2 penalizes), with the clock jumping to every
-    deadline that expires between arrivals.  Device compute is off-clock:
-    waits measure pure batching delay, which is what the deadline knob
-    trades against occupancy.
-
-    Returns ``(RetrievalResult, waits)`` in submission order, where
-    ``waits[i]`` is the virtual seconds request ``i`` spent queued before
-    its batch launched.
+    ``tick`` fires expired deadlines (``poll`` undriven,
+    ``ServiceDriver.step`` driven); ``tick_at_arrivals`` additionally
+    ticks at every arrival instant — those ticks never launch anything
+    (no deadline has newly expired there), they only give a driver's
+    prefetch policy its lead time, so both parameterizations stay
+    bit-exact on the same trace by construction.
     """
     if not isinstance(svc.clock, ManualClock):
-        raise TypeError("replay_open_loop requires a ManualClock service")
+        raise TypeError("open-loop replay requires a ManualClock service")
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
     arrivals = np.atleast_1d(np.asarray(arrivals, np.float64))
@@ -373,13 +404,15 @@ def replay_open_loop(svc: AsyncRetrievalService, queries, weight_ids,
             if nd is None or nd > arrivals[i]:
                 break
             svc.clock.advance_to(nd)
-            svc.poll()
+            tick()
         svc.clock.advance_to(arrivals[i])
+        if tick_at_arrivals:
+            tick()
         futs.append(svc.submit(queries[i], weight_ids[i]))
     while svc.pending_count:  # run out the tail
         nd = svc.next_deadline()
         svc.clock.advance_to(nd)
-        svc.poll()
+        tick()
 
     answers = [f.result() for f in futs]
     t_resolved = np.array([f.t_resolved for f in futs])
@@ -392,3 +425,21 @@ def replay_open_loop(svc: AsyncRetrievalService, queries, weight_ids,
     )
     assert res.ids.shape == (nq, k)
     return res, t_resolved - arrivals
+
+
+def replay_open_loop(svc: AsyncRetrievalService, queries, weight_ids,
+                     arrivals):
+    """Open-loop trace replay on a ManualClock (virtual time).
+
+    ``arrivals`` are absolute non-decreasing virtual times, one per query;
+    each request is submitted alone at its arrival (the open-loop regime
+    serve_bench sweep 2 penalizes), with the clock jumping to every
+    deadline that expires between arrivals.  Device compute is off-clock:
+    waits measure pure batching delay, which is what the deadline knob
+    trades against occupancy.
+
+    Returns ``(RetrievalResult, waits)`` in submission order, where
+    ``waits[i]`` is the virtual seconds request ``i`` spent queued before
+    its batch launched.
+    """
+    return _replay(svc, queries, weight_ids, arrivals, tick=svc.poll)

@@ -284,6 +284,10 @@ class GroupServeStats:
     n_state_restores: int = 0  # host-copy uploads after an eviction
     n_state_evictions: int = 0  # times this group's state left the device
     n_state_invalidations: int = 0  # compaction-driven version bumps
+    n_state_prefetches: int = 0  # scheduler-issued ahead-of-launch restores
+    n_state_prefetch_wasted: int = 0  # prefetches evicted before any launch
+    n_state_restore_overlapped: int = 0  # prefetched restores consumed by a
+    # launch (the upload overlapped other work instead of blocking it)
 
     @property
     def occupancy(self) -> float:
@@ -305,6 +309,9 @@ class GroupServeStats:
             n_state_restores=self.n_state_restores,
             n_state_evictions=self.n_state_evictions,
             n_state_invalidations=self.n_state_invalidations,
+            n_state_prefetches=self.n_state_prefetches,
+            n_state_prefetch_wasted=self.n_state_prefetch_wasted,
+            n_state_restore_overlapped=self.n_state_restore_overlapped,
         )
 
 
@@ -418,14 +425,18 @@ class Batcher:
         A group that has absorbed delta compactions rebuilds over its
         union corpus (base points + compacted rows, sealed codes reused),
         so paging in discard mode can never silently drop streamed rows.
+        After a tombstone purge the surviving base rows are threaded
+        through too, so a rebuild can never resurrect purged rows.
         """
-        extra_points = extra_codes = None
+        extra_points = extra_codes = base_rows = None
         if self._delta is not None:
             extra_points, extra_codes = self._delta.compacted_rows(gi)
+            base_rows = self._delta.base_rows()
         return build_group_state(
             self.mesh, self.group_config(gi), self.points,
             self.plan.groups[gi],
             extra_points=extra_points, extra_codes=extra_codes,
+            base_rows=base_rows,
         )
 
     def _on_cache_event(self, gi: int, kind: str) -> None:
@@ -441,6 +452,12 @@ class Batcher:
             st.n_state_evictions += 1
         elif kind == "invalidate":
             st.n_state_invalidations += 1
+        elif kind == "prefetch":
+            st.n_state_prefetches += 1
+        elif kind == "prefetch_wasted":
+            st.n_state_prefetch_wasted += 1
+        elif kind == "restore_overlapped":
+            st.n_state_restore_overlapped += 1
 
     def warmup(self, groups=None) -> None:
         """Build states and compile steps ahead of traffic.
@@ -493,12 +510,15 @@ class Batcher:
                 if s.n_batches}
 
     def cache_summary(self) -> dict:
-        """Aggregate state-paging report (counters + current residency)."""
+        """Aggregate state-paging report (counters + current residency).
+
+        ``resident_bytes`` and ``budget_utilization`` ride in from
+        ``CacheStats.summary()``.
+        """
         return dict(
             **self.state_cache.stats.summary(),
             n_resident=self.state_cache.n_resident,
             n_groups=self.plan.n_groups,
-            resident_bytes=self.state_cache.resident_bytes,
             max_resident_groups=self.cfg.max_resident_groups,
             device_budget_bytes=self.cfg.device_budget_bytes,
         )
@@ -531,15 +551,18 @@ class Batcher:
         """Tombstone ``point_id``: it never appears in results again."""
         self.delta_index().delete(point_id)
 
-    def compact(self, group: int | None = None) -> int:
+    def compact(self, group: int | None = None, purge: bool = False) -> int:
         """Compact sealed delta segments into the main group state(s).
 
         Returns the number of rows absorbed (0 with nothing sealed or no
-        streaming writes yet).
+        streaming writes yet).  ``purge=True`` upgrades the sweep to a
+        tombstone purge (see ``DeltaIndex.compact``): states rebuild over
+        their surviving corpus, ``n_valid`` capacity is reclaimed, and
+        the tombstone set is cleared.
         """
         if self._delta is None:
             return 0
-        return self._delta.compact(group)
+        return self._delta.compact(group, purge=purge)
 
     def delta_summary(self) -> dict:
         """Aggregate streaming counters (empty dict before any write)."""

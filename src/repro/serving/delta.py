@@ -23,8 +23,15 @@ lives here, per table group:
              ``build_group_state`` over the union corpus.
   delete     ``delete(id)`` tombstones a global id (base or inserted);
              tombstoned ids are filtered out of every merged top-k.
-             Tombstones survive compaction — purging them from the main
-             state is a future rebuild-style operation.
+             Tombstones survive ordinary compaction.
+  purge      ``compact(purge=True)`` is the rebuild-style sweep: every
+             group's state is rebuilt over its *surviving* corpus
+             (tombstoned base rows and inserts dropped), reclaiming their
+             ``n_valid`` row capacity, and the tombstone set is cleared —
+             merges stop paying the filter.  The purged state is
+             bit-exact with a fresh ``build_group_state`` over the
+             survivors, and no compiled step is touched (capacity shapes
+             never change; ``n_valid`` only shrinks).
 
 Every query launched through ``Batcher.run_batch`` calls ``augment``:
 state-row indices translate to global ids, the group's pending rows are
@@ -58,6 +65,8 @@ class DeltaStats:
     n_compactions: int = 0  # compaction transactions committed
     n_rows_compacted: int = 0  # rows absorbed into main states
     n_delta_scans: int = 0  # launches that also scanned pending rows
+    n_purges: int = 0  # purge sweeps (tombstone-dropping union rebuilds)
+    n_rows_purged: int = 0  # tombstoned rows dropped from main states
 
 
 class _GroupDelta:
@@ -108,7 +117,26 @@ class DeltaIndex:
             gi: _GroupDelta(plan.d) for gi in range(plan.n_groups)
         }
         self.tombstones: set[int] = set()
+        # surviving base-corpus rows after purges: global ids (== row
+        # indices into batcher.points), insertion order.  None = every
+        # base row is live (the pre-purge fast path).
+        self._base_ids: np.ndarray | None = None
         self.stats = DeltaStats()
+
+    @property
+    def n_base_live(self) -> int:
+        """Live (unpurged) base-corpus rows at the front of every state."""
+        return self.base_n if self._base_ids is None else len(self._base_ids)
+
+    def base_rows(self) -> np.ndarray | None:
+        """Surviving base row indices for rebuilds (None = all rows).
+
+        Shared by every group: tombstones are global, so a purged base
+        row is gone from each group's state.  ``Batcher._build_state``
+        threads this into ``build_group_state`` so discard-mode cold
+        rebuilds after a purge cannot resurrect dropped rows.
+        """
+        return self._base_ids
 
     # -------------------------------------------------------------- writes
 
@@ -174,12 +202,26 @@ class DeltaIndex:
 
     # ---------------------------------------------------------- compaction
 
-    def compact(self, group: int | None = None) -> int:
+    def compact(self, group: int | None = None, purge: bool = False) -> int:
         """Compact sealed segments into the main state(s); returns rows.
 
         ``group=None`` sweeps every group.  Open (unsealed) memtables are
         sealed first, so an explicit ``compact()`` is a full flush.
+
+        ``purge=True`` upgrades the sweep to a tombstone purge: every
+        group's state is rebuilt over its surviving corpus (pending rows
+        absorbed, tombstoned rows dropped, ``n_valid`` capacity
+        reclaimed) and the tombstone set is cleared.  Tombstones are
+        global, so a purge is necessarily whole-service: combining it
+        with a single ``group`` raises.
         """
+        if purge:
+            if group is not None:
+                raise ValueError(
+                    "purge rebuilds every group (tombstones are global); "
+                    "drop the group argument"
+                )
+            return self._purge()
         gis = (
             [int(group)] if group is not None
             else list(range(self.batcher.plan.n_groups))
@@ -212,7 +254,7 @@ class DeltaIndex:
         ids = np.concatenate([s.ids for s in gd.sealed])
         vecs = np.concatenate([s.vectors for s in gd.sealed])
         codes = np.concatenate([s.codes for s in gd.sealed])
-        rows_now = self.base_n + len(gd.compacted_ids)
+        rows_now = self.n_base_live + len(gd.compacted_ids)
         if rows_now + len(ids) > cfg.n:
             if not strict:
                 return 0
@@ -236,6 +278,126 @@ class DeltaIndex:
         self.stats.n_rows_compacted += len(ids)
         self.batcher.plan = self.batcher.plan.bumped(len(ids))
         return len(ids)
+
+    def _purge(self) -> int:
+        """Tombstone-purging rebuild of every group; returns rows absorbed.
+
+        Full flush first (open memtables seal, like ``compact``), then
+        each group's state is rebuilt from its surviving corpus: live
+        base rows (shared across groups — tombstones are global) plus the
+        group's compacted and sealed rows minus tombstoned ones, with
+        their already-sealed codes reused.  ``StateCache.replace``
+        installs each rebuilt state at a bumped version, ``n_valid``
+        shrinks by the dropped rows (capacity reclaimed for future
+        compactions), compiled steps are untouched (capacity shapes never
+        change), and the result is bit-exact with a fresh
+        ``build_group_state`` over the survivors.  Ends by clearing the
+        tombstone set — merges stop paying the filter — and bumping the
+        plan version, with ``corpus_epoch`` advanced to cover every id
+        ever minted (a tombstoned pending row is dropped rather than
+        absorbed, but its id is spent, so a resumed service must not
+        re-mint it).
+
+        The sweep is transactional *and* budget-respecting: capacity and
+        pinning are validated for every group up front (the same
+        explicit ``delta_reserve_rows`` error ordinary compaction
+        raises), and the commit itself is pure host-side bookkeeping —
+        log rewrites plus versioned ``StateCache.invalidate`` of the
+        rebuilt groups, no device work at all.  Each invalidated group
+        cold-builds lazily on its next acquire through the normal
+        ``Batcher._build_state`` path (which threads the surviving base
+        rows and the rewritten logs), so rebuilds page one at a time
+        under the configured device budget instead of materializing
+        every state at once.  Only groups that actually drop a row
+        rebuild: with no base row dropped this sweep, a group whose
+        rows all survive takes the ordinary (cheaper) append-compaction
+        for its sealed backlog — or is left entirely untouched, cached
+        state and all; with no tombstones at all the purge degrades to
+        an ordinary full ``compact``.
+        """
+        if not self.tombstones:
+            return self.compact()
+        plan = self.batcher.plan
+        cache = self.batcher.state_cache
+        for gi in range(plan.n_groups):
+            self.seal(gi)
+        tomb = np.fromiter(
+            self.tombstones, np.int64, count=len(self.tombstones)
+        )
+        base_ids = (
+            self._base_ids if self._base_ids is not None
+            else np.arange(self.base_n, dtype=np.int64)
+        )
+        base_keep = base_ids[~np.isin(base_ids, tomb)]
+        base_changed = len(base_keep) < len(base_ids)
+
+        # phase 1: gather survivors and validate every group, before any
+        # state is touched — a raise here leaves the service unchanged
+        survivors = {}
+        rebuild = set()
+        for gi in range(plan.n_groups):
+            gd = self._groups[gi]
+            n_comp = len(gd.compacted_ids)
+            ids = np.concatenate(
+                [gd.compacted_ids] + [s.ids for s in gd.sealed]
+            )
+            keep = ~np.isin(ids, tomb)
+            surv_vecs = surv_codes = None
+            if len(ids):
+                vecs = np.concatenate(
+                    gd.compacted_vecs + [s.vectors for s in gd.sealed]
+                )
+                codes = np.concatenate(
+                    gd.compacted_codes + [s.codes for s in gd.sealed]
+                )
+                surv_vecs, surv_codes = vecs[keep], codes[keep]
+            cfg = self.batcher.group_config(gi)
+            if len(base_keep) + int(keep.sum()) > cfg.n:
+                raise ValueError(
+                    f"group {gi} purge needs "
+                    f"{len(base_keep) + int(keep.sum())} rows but the "
+                    f"state capacity is {cfg.n}; raise "
+                    f"ServiceConfig.delta_reserve_rows"
+                )
+            if base_changed or not keep.all():
+                rebuild.add(gi)
+                if cache.pin_count(gi):
+                    raise ValueError(
+                        f"cannot purge while group {gi} is pinned "
+                        f"(launch in flight)"
+                    )
+            survivors[gi] = (ids[keep], surv_vecs, surv_codes,
+                             int(keep[n_comp:].sum()), int((~keep).sum()))
+
+        # phase 2: commit — host-side log rewrites plus versioned
+        # invalidations for rebuilt groups (their next acquire cold-builds
+        # from the committed logs, one at a time under the paging budget);
+        # untouched groups absorb their sealed backlog through the
+        # ordinary append path (no-op with nothing sealed)
+        absorbed = n_purged = 0
+        for gi in range(plan.n_groups):
+            if gi not in rebuild:
+                absorbed += self._compact_group(gi)
+                continue
+            gd = self._groups[gi]
+            surv_ids, surv_vecs, surv_codes, n_abs, n_drop = survivors[gi]
+            cache.invalidate(gi)
+            absorbed += n_abs
+            n_purged += (len(base_ids) - len(base_keep)) + n_drop
+            gd.compacted_ids = surv_ids
+            gd.compacted_vecs = [surv_vecs] if len(surv_ids) else []
+            gd.compacted_codes = [surv_codes] if len(surv_ids) else []
+            gd.sealed.clear()
+            self.stats.n_rows_compacted += n_abs
+        if base_changed or self._base_ids is not None:
+            self._base_ids = base_keep
+        self.tombstones.clear()
+        self.stats.n_compactions += 1
+        self.stats.n_purges += 1
+        self.stats.n_rows_purged += n_purged
+        epoch = self.batcher.plan.corpus_epoch or self.base_n
+        self.batcher.plan = self.batcher.plan.bumped(self._next_id - epoch)
+        return absorbed
 
     def compacted_rows(
         self, gi: int
@@ -263,19 +425,27 @@ class DeltaIndex:
     def augment(self, gi, queries, weight_ids, ids, dists):
         """Fold the group's delta state into one launch's indexed hits.
 
-        Translates appended state rows to global ids, scans the group's
-        pending rows exactly under each query's own weight, and merges
-        under the tombstone filter.  With nothing pending and no
-        tombstones the indexed results pass through bit-exactly.
+        Translates state rows to global ids (appended rows through the
+        group's append log; post-purge base rows through the surviving-id
+        map), scans the group's pending rows exactly under each query's
+        own weight, and merges under the tombstone filter.  With nothing
+        pending and no tombstones the indexed results pass through
+        bit-exactly.
         """
         gi = int(gi)
         gd = self._groups[gi]
+        nb = self.n_base_live
         translated = ids
-        if len(gd.compacted_ids):
-            t = np.asarray(ids, np.int64).copy()
-            m = t >= self.base_n
-            if m.any():
-                t[m] = gd.compacted_ids[t[m] - self.base_n]
+        if len(gd.compacted_ids) or self._base_ids is not None:
+            orig = np.asarray(ids, np.int64)
+            t = orig.copy()
+            hi = orig >= nb
+            if hi.any():
+                t[hi] = gd.compacted_ids[orig[hi] - nb]
+            if self._base_ids is not None:
+                lo = (orig >= 0) & (orig < nb)
+                if lo.any():
+                    t[lo] = self._base_ids[orig[lo]]
             translated = t
         if not gd.n_pending and not self.tombstones:
             if translated is ids:
@@ -310,6 +480,9 @@ class DeltaIndex:
             n_compactions=self.stats.n_compactions,
             n_rows_compacted=self.stats.n_rows_compacted,
             n_delta_scans=self.stats.n_delta_scans,
+            n_purges=self.stats.n_purges,
+            n_rows_purged=self.stats.n_rows_purged,
+            n_base_live=self.n_base_live,
             n_pending=sum(g.n_pending for g in self._groups.values()),
             n_sealed_segments=sum(
                 len(g.sealed) for g in self._groups.values()

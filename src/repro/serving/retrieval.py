@@ -160,14 +160,16 @@ class RetrievalService:
         """Tombstone a global point id; it never appears in results again."""
         self.batcher.delete(point_id)
 
-    def compact(self, group: int | None = None) -> int:
+    def compact(self, group: int | None = None, purge: bool = False) -> int:
         """Flush and compact delta segments into the main group state(s).
 
         Returns the number of rows absorbed.  Only the compacted groups'
         cached states are invalidated (at a bumped version); compiled
-        query steps are untouched.
+        query steps are untouched.  ``purge=True`` additionally drops
+        every tombstoned row from the rebuilt states, reclaims their
+        ``n_valid`` capacity and clears the tombstone set.
         """
-        return self.batcher.compact(group)
+        return self.batcher.compact(group, purge=purge)
 
     def delta_summary(self) -> dict:
         """Streaming counters (inserts/seals/compactions/tombstones)."""

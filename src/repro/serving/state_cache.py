@@ -8,15 +8,32 @@ plus vectors ``(n, d)`` — dominates the serving footprint.  Keeping every
 ``StateCache`` bounds residency under an explicit budget instead:
 
   build     a group's state is built on first acquire (cold miss)
-  evict     before a miss materializes a new state, least-recently-used
-            *unpinned* groups are evicted until the incoming state fits
-            ``max_resident_groups`` / ``device_budget_bytes`` (its size
-            is known up front, so the budget holds at peak residency);
-            with an ``offload`` hook the evicted state is pulled to host
-            memory first, otherwise it is discarded
+  evict     before a miss materializes a new state, *unpinned*,
+            *unprotected* groups are evicted until the incoming state
+            fits ``max_resident_groups`` / ``device_budget_bytes`` (its
+            size is known up front, so the budget holds at peak
+            residency); with an ``offload`` hook the evicted state is
+            pulled to host memory first, otherwise it is discarded.  The
+            victim is least-recently-used by default; an
+            ``eviction_policy`` hook (see ``serving.scheduler``) makes
+            the choice pluggable — the cost-aware default there scores
+            recency against ``state_nbytes`` restore cost
   restore   re-acquiring an offloaded group uploads the host copy (warm
             miss: one host-to-device copy, bit-identical bytes, no
             re-encode and no recompile)
+  prefetch  ``prefetch(gi)`` starts the restore (or build) *ahead* of
+            the acquire that will need it — the scheduler issues it from
+            the pending-deadline schedule, so the host-to-device upload
+            (asynchronous under JAX) overlaps in-flight launches instead
+            of serializing into a launch's critical path.  A prefetched
+            state consumed by a later acquire counts a hit (and
+            ``n_restore_overlapped`` when the prefetch restored); one
+            evicted or invalidated before any acquire counts
+            ``n_prefetch_wasted``
+  protect   ``protect(gis)`` marks groups scheduled to launch within
+            their restore horizon: they are never chosen as eviction
+            victims (the budget goes soft instead, like pinning), so a
+            prefetch can never evict a state that is about to launch
   pin       an acquired state is pinned until ``release`` — a launch in
             flight can never lose its state to a concurrent acquire, and
             deadline-driven partial launches cannot thrash each other
@@ -45,7 +62,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable
 
-__all__ = ["CacheStats", "StateCache"]
+__all__ = ["CacheStats", "EvictionCandidate", "StateCache"]
 
 
 @dataclasses.dataclass
@@ -53,10 +70,18 @@ class CacheStats:
     """Running cache counters (reset with ``StateCache.reset_stats``)."""
 
     n_hits: int = 0  # acquire found the state resident
-    n_builds: int = 0  # cold miss: state built from scratch
-    n_restores: int = 0  # warm miss: host copy uploaded
+    n_builds: int = 0  # cold miss: state built from scratch (incl. prefetch)
+    n_restores: int = 0  # warm miss: host copy uploaded (incl. prefetch)
     n_evictions: int = 0  # device evictions (offloaded or discarded)
     n_invalidations: int = 0  # version bumps (compaction replace/invalidate)
+    n_prefetches: int = 0  # prefetch calls that issued a restore or build
+    n_prefetch_wasted: int = 0  # prefetched states evicted before any acquire
+    n_restore_overlapped: int = 0  # prefetch restores later consumed by an
+    # acquire: the upload overlapped other work instead of blocking a launch
+    resident_bytes: int = 0  # current accounted residency (not a counter:
+    # kept in sync by the cache, survives reset_stats)
+    device_budget_bytes: int | None = None  # the cache's byte budget, for
+    # the derived utilization (None = unbudgeted)
 
     @property
     def n_misses(self) -> int:
@@ -65,20 +90,54 @@ class CacheStats:
 
     @property
     def hit_rate(self) -> float:
-        """Resident-hit fraction over all acquires (nan with no traffic)."""
+        """Resident-hit fraction over all acquires (nan with no traffic).
+
+        Prefetch-issued restores/builds count in the denominator — a
+        prefetch that is never consumed must not look free.
+        """
         total = self.n_hits + self.n_misses
         return self.n_hits / total if total else float("nan")
 
+    @property
+    def budget_utilization(self) -> float:
+        """Resident bytes as a fraction of the byte budget.
+
+        nan when the cache has no ``device_budget_bytes`` budget.
+        """
+        if not self.device_budget_bytes:
+            return float("nan")
+        return self.resident_bytes / self.device_budget_bytes
+
     def summary(self) -> dict:
-        """Flat dict of every counter plus the derived hit rate."""
+        """Flat dict of every counter plus the derived rates/residency."""
         return dict(
             n_hits=self.n_hits,
             n_builds=self.n_builds,
             n_restores=self.n_restores,
             n_evictions=self.n_evictions,
             n_invalidations=self.n_invalidations,
+            n_prefetches=self.n_prefetches,
+            n_prefetch_wasted=self.n_prefetch_wasted,
+            n_restore_overlapped=self.n_restore_overlapped,
             hit_rate=self.hit_rate,
+            resident_bytes=self.resident_bytes,
+            budget_utilization=self.budget_utilization,
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class EvictionCandidate:
+    """One evictable resident group, as seen by an eviction policy.
+
+    ``last_use`` is a monotone access tick (smaller = staler); policies
+    compare ticks, never wall-clock.  ``prefetched`` marks a state brought
+    in by ``prefetch`` and not yet consumed by any acquire.
+    """
+
+    group_id: int
+    last_use: int
+    nbytes: int
+    prefetched: bool = False
 
 
 @dataclasses.dataclass
@@ -90,6 +149,9 @@ class _Entry:
     nbytes: int = 0
     pins: int = 0
     version: int = 0  # group version the stored bytes correspond to
+    last_use: int = 0  # monotone access tick (acquire/prefetch/replace)
+    prefetched: str | None = None  # "restore"/"build" while brought in by
+    # prefetch and not yet consumed by an acquire
 
 
 class StateCache:
@@ -117,8 +179,15 @@ class StateCache:
         copy.  Required when ``offload`` is set.
     on_event:
         Optional ``on_event(group_id, kind)`` observer with kind in
-        ``{"hit", "build", "restore", "evict"}`` — the hook ``Batcher``
+        ``{"hit", "build", "restore", "evict", "invalidate", "prefetch",
+        "prefetch_wasted", "restore_overlapped"}`` — the hook ``Batcher``
         uses to mirror cache activity into its per-group serving stats.
+    eviction_policy:
+        Optional victim selector ``policy(candidates) -> group_id`` over
+        a tuple of ``EvictionCandidate`` (every unpinned, unprotected
+        resident group).  None keeps the classic least-recently-used
+        choice; ``serving.scheduler.CostAwareEviction`` is the cost-aware
+        default the real-time driver installs.
     """
 
     def __init__(
@@ -131,6 +200,7 @@ class StateCache:
         offload: Callable[[object], object] | None = None,
         restore: Callable[[int, object], object] | None = None,
         on_event: Callable[[int, str], None] | None = None,
+        eviction_policy: Callable[[tuple], int] | None = None,
     ):
         if max_resident_groups is not None and max_resident_groups < 1:
             raise ValueError(
@@ -151,6 +221,7 @@ class StateCache:
         self._offload = offload
         self._restore = restore
         self._on_event = on_event or (lambda gi, kind: None)
+        self.eviction_policy = eviction_policy
         # LRU order: first = least recently used.  Non-resident entries
         # (host copy only) live in _offloaded.
         self._resident: OrderedDict[int, _Entry] = OrderedDict()
@@ -160,7 +231,9 @@ class StateCache:
         # the group's current version; invalidate/replace bump it so a
         # compacted group can never serve a pre-compaction copy
         self._versions: dict[int, int] = {}
-        self.stats = CacheStats()
+        self._protected: frozenset[int] = frozenset()
+        self._tick = 0  # monotone access counter for recency scoring
+        self.stats = CacheStats(device_budget_bytes=device_budget_bytes)
 
     # ------------------------------------------------------------- inspection
 
@@ -187,13 +260,40 @@ class StateCache:
         entry = self._resident.get(int(gi))
         return entry.pins if entry is not None else 0
 
+    def nbytes_of(self, gi: int) -> int:
+        """Accounted device footprint of group ``gi``'s state.
+
+        The resident entry's priced size when the group is on device,
+        otherwise the ``nbytes_of`` estimate — what eviction, budgets and
+        the scheduler's imminent-set clamp all price with.
+        """
+        entry = self._resident.get(int(gi))
+        return entry.nbytes if entry is not None else self._nbytes_of(gi)
+
     def version_of(self, gi: int) -> int:
         """Current version of group ``gi`` (bumped by invalidate/replace)."""
         return self._versions.get(int(gi), 0)
 
+    def protected_group_ids(self) -> frozenset[int]:
+        """Groups currently shielded from eviction (see ``protect``)."""
+        return self._protected
+
     def reset_stats(self) -> None:
-        """Zero the hit/build/restore/eviction counters."""
-        self.stats = CacheStats()
+        """Zero the counters (current residency/budget figures survive)."""
+        self.stats = CacheStats(
+            resident_bytes=self._resident_nbytes,
+            device_budget_bytes=self.device_budget_bytes,
+        )
+
+    def _add_bytes(self, delta: int) -> None:
+        """Adjust the accounted residency (mirrored into the stats)."""
+        self._resident_nbytes += delta
+        self.stats.resident_bytes = self._resident_nbytes
+
+    def _touch(self, entry: _Entry) -> None:
+        """Stamp ``entry`` with the next monotone access tick."""
+        self._tick += 1
+        entry.last_use = self._tick
 
     # ---------------------------------------------------------------- serving
 
@@ -208,16 +308,34 @@ class StateCache:
         residency — never exceeded transiently by the incoming group.
         """
         gi = int(gi)
-        version = self.version_of(gi)
         entry = self._resident.get(gi)
-        if entry is not None and entry.version == version:
+        if entry is not None and entry.version == self.version_of(gi):
             self._resident.move_to_end(gi)
+            self._touch(entry)
             entry.pins += 1
             self.stats.n_hits += 1
             self._on_event(gi, "hit")
+            if entry.prefetched is not None:
+                # the prefetch paid off: the upload happened before this
+                # acquire needed it, off the launch's critical path
+                if entry.prefetched == "restore":
+                    self.stats.n_restore_overlapped += 1
+                    self._on_event(gi, "restore_overlapped")
+                entry.prefetched = None
             return entry.state
-        if entry is not None:  # stale resident copy (defensive: invalidate
-            self.evict(gi)  # and replace already drop these eagerly)
+        entry, _ = self._materialize(gi)
+        entry.pins += 1
+        return entry.state
+
+    def _materialize(self, gi: int) -> tuple[_Entry, str]:
+        """Shared miss path of ``acquire`` and ``prefetch``.
+
+        Evicts to fit, then restores the host copy or cold-builds, and
+        installs the state resident (unpinned).
+        """
+        version = self.version_of(gi)
+        if self._resident.get(gi) is not None:  # stale resident copy
+            self.evict(gi)  # (defensive: invalidate/replace drop eagerly)
         entry = self._offloaded.get(gi)
         if entry is not None and entry.version != version:
             del self._offloaded[gi]
@@ -239,11 +357,12 @@ class StateCache:
             )
             self.stats.n_builds += 1
             kind = "build"
-        entry.pins += 1
         self._resident[gi] = entry  # newest LRU position
-        self._resident_nbytes += entry.nbytes
+        self._touch(entry)
+        self._add_bytes(entry.nbytes)
         self._on_event(gi, kind)
-        return entry.state
+        entry.prefetched = None
+        return entry, kind
 
     def release(self, gi: int) -> None:
         """Unpin one ``acquire`` of group ``gi`` (making it evictable)."""
@@ -262,6 +381,44 @@ class StateCache:
         finally:
             self.release(gi)
 
+    # ------------------------------------------------------------ prefetching
+
+    def prefetch(self, gi: int) -> bool:
+        """Start bringing group ``gi``'s state on device ahead of its launch.
+
+        A no-op (returning False) when the state is already resident at
+        its current version.  Otherwise the same evict-to-fit + restore /
+        build path as a miss runs *now* — and since JAX host-to-device
+        transfers are asynchronous, the upload overlaps whatever launches
+        the caller runs next instead of blocking the acquire that will
+        eventually need this state.  The state is installed resident but
+        *unpinned*; a later ``acquire`` consumes it as a hit (counting
+        ``n_restore_overlapped`` when the prefetch restored), while an
+        eviction or invalidation before any acquire counts the work as
+        ``n_prefetch_wasted``.  Returns True when work was issued.
+        """
+        gi = int(gi)
+        entry = self._resident.get(gi)
+        if entry is not None and entry.version == self.version_of(gi):
+            return False
+        entry, kind = self._materialize(gi)
+        entry.prefetched = kind
+        self.stats.n_prefetches += 1
+        self._on_event(gi, "prefetch")
+        return True
+
+    def protect(self, group_ids) -> None:
+        """Shield ``group_ids`` from eviction until the next ``protect``.
+
+        The scheduler's per-tick contract: groups scheduled to launch
+        within their restore horizon are protected, so neither a prefetch
+        nor a concurrent miss can evict a state that is about to be
+        acquired.  Like pinning, protection makes the budget soft rather
+        than deadlocking — each call *replaces* the previous set (pass an
+        empty iterable to clear), so stale protection cannot accumulate.
+        """
+        self._protected = frozenset(int(g) for g in group_ids)
+
     # --------------------------------------------------------------- eviction
 
     def _over_budget(self, incoming_groups: int = 0,
@@ -274,12 +431,36 @@ class StateCache:
             self.resident_bytes + incoming_bytes > self.device_budget_bytes
         )
 
+    def _pick_victim(self) -> int | None:
+        """Choose the next eviction victim, or None when nothing is evictable.
+
+        Only unpinned, unprotected residents are candidates (LRU without
+        a policy); None means soft budget, never a deadlock.
+        """
+        candidates = tuple(
+            EvictionCandidate(
+                group_id=gi, last_use=e.last_use, nbytes=e.nbytes,
+                prefetched=e.prefetched is not None,
+            )
+            for gi, e in self._resident.items()
+            if e.pins == 0 and gi not in self._protected
+        )
+        if not candidates:
+            return None
+        if self.eviction_policy is None:
+            return candidates[0].group_id  # insertion order = LRU first
+        victim = int(self.eviction_policy(candidates))
+        if victim not in {c.group_id for c in candidates}:
+            raise ValueError(
+                f"eviction policy chose group {victim}, which is not an "
+                f"evictable candidate"
+            )
+        return victim
+
     def _evict_lru_while(self, over) -> None:
         while over():
-            victim = next(
-                (gi for gi, e in self._resident.items() if e.pins == 0), None
-            )
-            if victim is None:  # everything pinned: soft budget, no deadlock
+            victim = self._pick_victim()
+            if victim is None:  # everything pinned/protected: soft budget
                 return
             self.evict(victim)
 
@@ -299,13 +480,21 @@ class StateCache:
         if entry.pins:
             raise ValueError(f"cannot evict pinned group {gi}")
         del self._resident[gi]
-        self._resident_nbytes -= entry.nbytes
+        self._add_bytes(-entry.nbytes)
         if self._offload is not None:
             entry.host = self._offload(entry.state)
             self._offloaded[gi] = entry
         entry.state = None  # drop the device reference either way
+        self._mark_wasted_prefetch(gi, entry)
         self.stats.n_evictions += 1
         self._on_event(gi, "evict")
+
+    def _mark_wasted_prefetch(self, gi: int, entry: _Entry) -> None:
+        """Count a prefetched state that left the device unconsumed."""
+        if entry.prefetched is not None:
+            entry.prefetched = None
+            self.stats.n_prefetch_wasted += 1
+            self._on_event(gi, "prefetch_wasted")
 
     def clear(self) -> None:
         """Drop every unpinned resident state (keeping host copies)."""
@@ -330,8 +519,9 @@ class StateCache:
             if entry.pins:
                 raise ValueError(f"cannot invalidate pinned group {gi}")
             del self._resident[gi]
-            self._resident_nbytes -= entry.nbytes
+            self._add_bytes(-entry.nbytes)
             entry.state = None
+            self._mark_wasted_prefetch(gi, entry)
         self._offloaded.pop(gi, None)
         self._versions[gi] = self.version_of(gi) + 1
         self.stats.n_invalidations += 1
@@ -358,16 +548,19 @@ class StateCache:
             self._evict_to_fit(nbytes)
             entry = _Entry(nbytes=nbytes)
             self._resident[gi] = entry
-            self._resident_nbytes += nbytes
-        elif nbytes is not None:
-            self._resident_nbytes += nbytes - entry.nbytes
-            entry.nbytes = nbytes
+            self._add_bytes(nbytes)
+        else:
+            if nbytes is not None:
+                self._add_bytes(nbytes - entry.nbytes)
+                entry.nbytes = nbytes
+            self._mark_wasted_prefetch(gi, entry)
         self._offloaded.pop(gi, None)
         self._versions[gi] = self.version_of(gi) + 1
         entry.version = self._versions[gi]
         entry.state = state
         entry.host = None
         self._resident.move_to_end(gi)
+        self._touch(entry)
         self.stats.n_invalidations += 1
         self._on_event(gi, "invalidate")
         self._enforce_budget()

@@ -36,6 +36,7 @@ DOCSTRING_SCOPE = [
     "src/repro/serving/retrieval.py",
     "src/repro/serving/async_service.py",
     "src/repro/serving/state_cache.py",
+    "src/repro/serving/scheduler.py",
     "src/repro/serving/delta.py",
     "src/repro/serving/decode.py",
     "src/repro/core/serving_plan.py",
@@ -53,7 +54,8 @@ TINY_OVERRIDES = {
     "--v": "4",
     "--q-batch": "4",
 }
-_STORE_TRUE = {"--check", "--async", "--no-pallas"}
+_STORE_TRUE = {"--check", "--async", "--no-pallas", "--driver",
+               "--prefetch"}
 
 
 def _fenced_blocks(text: str) -> list[str]:
@@ -164,7 +166,9 @@ def test_docs_cross_links():
                    "AsyncRetrievalService", "launch/retrieval.py",
                    "state_nbytes", "max_resident_groups",
                    "DeltaIndex", "delta_seal_rows", "append_to_state",
-                   "n_valid"):
+                   "n_valid", "ServiceDriver", "DeadlinePrefetch",
+                   "CostAwareEviction", "scheduler.py", "prefetch",
+                   "purge=True"):
         assert anchor in arch, f"ARCHITECTURE.md lost its {anchor} coverage"
 
 

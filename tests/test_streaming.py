@@ -395,6 +395,243 @@ def test_compacted_state_bit_equals_fresh_union_state(parity_setup):
         svc.state_cache.release(gi)
 
 
+# ------------------------------------------------------------ tombstone purge
+
+
+def test_purge_drops_tombstones_and_reclaims_capacity(setup):
+    """compact(purge=True): tombstoned rows (base and inserted, compacted
+    and pending) leave the states, their n_valid capacity is reclaimed,
+    the tombstone set is cleared, and no query step recompiles."""
+    data, weights, host, plan, _ = setup
+    svc = _streaming_service(plan, data, seal_rows=4, reserve=64)
+    gi = int(np.argmax([g.n_members for g in plan.groups]))
+    w_in = int(plan.groups[gi].member_ids[0])
+    pids = [svc.insert(_far_vector(data, j, 21), w_in) for j in range(8)]
+    svc.compact()  # absorb them, then tombstone a few
+    q = data[11].astype(np.float32)
+    victim_base = int(svc.query(q[None], [0]).ids[0][0])
+    svc.delete(victim_base)
+    svc.delete(pids[2])
+    extra = [svc.insert(_far_vector(data, j, 23), w_in) for j in range(3)]
+    svc.delete(extra[1])  # a still-pending insert, tombstoned
+    n_compiled0 = svc.step_cache.n_compiled
+    with svc.state_cache.lease(gi) as st:
+        nv_before = int(st.n_valid)
+
+    absorbed = svc.compact(purge=True)
+    assert absorbed == 2  # the two surviving pending inserts
+
+    d = svc.delta_summary()
+    assert d["n_tombstones"] == 0  # the set is cleared...
+    assert d["n_purges"] == 1 and d["n_rows_purged"] >= 3
+    assert d["n_base_live"] == plan.n - 1
+    assert d["n_pending"] == 0
+    assert svc.step_cache.n_compiled == n_compiled0
+    with svc.state_cache.lease(gi) as st:
+        # 8 compacted - 1 purged + 2 surviving pending - 1 purged base
+        assert int(st.n_valid) == nv_before - 1 - 1 + 2
+    # ...and deleted rows are *gone*, not filtered: every group rebuilt
+    assert svc.cache_summary()["n_invalidations"] >= plan.n_groups
+    r = svc.query(q[None], [0])
+    assert victim_base not in r.ids[0]
+    for j, pid in enumerate(pids):
+        r = svc.query(_far_vector(data, j, 21)[None], [w_in])
+        if j == 2:
+            assert pid not in r.ids[0]
+        else:
+            assert r.ids[0][0] == pid and r.dists[0][0] == 0.0
+    assert svc.query(
+        _far_vector(data, 0, 23)[None], [w_in]
+    ).ids[0][0] == extra[0]
+    assert extra[1] not in svc.query(
+        _far_vector(data, 1, 23)[None], [w_in]
+    ).ids[0]
+    # plan lineage: the purge bumps the version, and the epoch covers
+    # every minted id — including the tombstoned pending insert that was
+    # dropped instead of absorbed — so a resumed service never reuses one
+    assert svc.plan.version >= 2 and svc.plan.corpus_epoch == plan.n + 11
+    # a per-group purge is rejected (tombstones are global)
+    with pytest.raises(ValueError, match="purge"):
+        svc.compact(group=gi, purge=True)
+
+
+def test_purge_survives_eviction_and_continues_streaming(setup):
+    """Post-purge cold rebuilds (discard-mode paging) must reproduce the
+    purged corpus — never resurrect dropped rows — and later inserts /
+    compactions keep working against the purged base."""
+    data, weights, host, plan, _ = setup
+    svc = _streaming_service(plan, data, cap=1, offload=False,
+                             seal_rows=4, reserve=64)
+    gi = int(np.argmax([g.n_members for g in plan.groups]))
+    w_in = int(plan.groups[gi].member_ids[0])
+    pid = svc.insert(_far_vector(data, 0, 27), w_in)
+    q = data[11].astype(np.float32)
+    victim_base = int(svc.query(q[None], [0]).ids[0][0])
+    svc.delete(victim_base)
+    svc.compact(purge=True)
+    # page the purged group out by touching every other group
+    for other in range(plan.n_groups):
+        if other != gi:
+            wo = int(plan.groups[other].member_ids[0])
+            svc.query(data[1][None].astype(np.float32), [wo])
+    assert not svc.state_cache.is_resident(gi)
+    r = svc.query(_far_vector(data, 0, 27)[None], [w_in])
+    assert r.ids[0][0] == pid and r.dists[0][0] == 0.0
+    assert victim_base not in svc.query(q[None], [0]).ids[0]
+    # streaming continues on the purged base: insert -> compact -> exact
+    pid2 = svc.insert(_far_vector(data, 1, 29), w_in)
+    assert svc.compact() == 1
+    r = svc.query(_far_vector(data, 1, 29)[None], [w_in])
+    assert r.ids[0][0] == pid2 and r.dists[0][0] == 0.0
+
+
+def test_failed_purge_commits_nothing(setup):
+    """The purge is transactional: a capacity overflow raises the same
+    explicit delta_reserve_rows error as ordinary compaction *before*
+    any state is replaced — tombstones, logs and answers are unchanged."""
+    data, weights, host, plan, _ = setup
+    svc = _streaming_service(plan, data, seal_rows=2, reserve=4)
+    gi = int(np.argmax([g.n_members for g in plan.groups]))
+    w_in = int(plan.groups[gi].member_ids[0])
+    pids = [svc.insert(_far_vector(data, j, 31), w_in) for j in range(6)]
+    svc.delete(0)  # a base tombstone so the purge can't degrade to compact
+    with pytest.raises(ValueError, match="delta_reserve_rows"):
+        svc.compact(purge=True)
+    d = svc.delta_summary()
+    assert d["n_purges"] == 0 and d["n_tombstones"] == 1
+    assert d["n_base_live"] == plan.n
+    assert svc.cache_summary()["n_invalidations"] == 0  # nothing committed
+    r = svc.query(_far_vector(data, 2, 31)[None], [w_in])
+    assert r.ids[0][0] == pids[2]  # rows keep serving from the exact scan
+
+
+def test_purge_without_tombstones_degrades_to_compact(setup):
+    """With nothing to drop, purge=True must not rebuild every group —
+    it delegates to the ordinary append-based full compact."""
+    data, weights, host, plan, _ = setup
+    svc = _streaming_service(plan, data, seal_rows=2, reserve=16)
+    gi = int(np.argmax([g.n_members for g in plan.groups]))
+    w_in = int(plan.groups[gi].member_ids[0])
+    svc.insert(_far_vector(data, 0, 33), w_in)
+    svc.insert(_far_vector(data, 1, 33), w_in)
+    assert svc.compact(purge=True) == 2
+    d = svc.delta_summary()
+    assert d["n_purges"] == 0  # no sweep happened...
+    assert d["n_compactions"] == 1  # ...just the ordinary compaction
+    assert svc.cache_summary()["n_invalidations"] == 1  # one group touched
+
+
+def test_identity_purge_rebuilds_only_affected_groups(setup):
+    """With the base corpus untouched, a purge rebuilds only groups that
+    actually drop a row; everyone else keeps their cached state (sealed
+    backlogs take the ordinary append path)."""
+    data, weights, host, plan, _ = setup
+    svc = _streaming_service(plan, data, seal_rows=4, reserve=64)
+    gi = int(np.argmax([g.n_members for g in plan.groups]))
+    w_in = int(plan.groups[gi].member_ids[0])
+    other = int(np.argmin(
+        [g.n_members if g2 != gi else 10**9
+         for g2, g in enumerate(plan.groups)]
+    ))
+    w_other = int(plan.groups[other].member_ids[0])
+    pids = [svc.insert(_far_vector(data, j, 41), w_in) for j in range(4)]
+    svc.compact(gi)
+    pid_other = svc.insert(_far_vector(data, 0, 43), w_other)
+    svc.delete(pids[1])  # only group gi drops a row
+    inval0 = {g: svc.stats[g].n_state_invalidations
+              for g in range(plan.n_groups)}
+    svc.compact(purge=True)
+    # gi rebuilt (one replace); `other` only absorbed its sealed row
+    # (ordinary append compaction); every untouched group: zero churn
+    for g in range(plan.n_groups):
+        delta = svc.stats[g].n_state_invalidations - inval0[g]
+        assert delta == (1 if g in (gi, other) else 0), (g, delta)
+    assert svc.delta_summary()["n_tombstones"] == 0
+    assert pids[1] not in svc.query(
+        _far_vector(data, 1, 41)[None], [w_in]
+    ).ids[0]
+    assert svc.query(
+        _far_vector(data, 0, 43)[None], [w_other]
+    ).ids[0][0] == pid_other
+    # ...and the optimization survives an earlier base-dropping purge:
+    # the next purge compares against the *current* surviving base, so a
+    # single-group insert tombstone again touches only that group
+    victim_base = int(svc.query(
+        data[11][None].astype(np.float32), [0]
+    ).ids[0][0])
+    svc.delete(victim_base)
+    svc.compact(purge=True)  # drops a base row: every group rebuilds
+    pid3 = svc.insert(_far_vector(data, 5, 47), w_in)
+    svc.compact(gi)
+    svc.delete(pid3)
+    inval1 = {g: svc.stats[g].n_state_invalidations
+              for g in range(plan.n_groups)}
+    svc.compact(purge=True)
+    for g in range(plan.n_groups):
+        delta = svc.stats[g].n_state_invalidations - inval1[g]
+        assert delta == (1 if g == gi else 0), (g, delta)
+
+
+@pytest.mark.slow_parity
+def test_purged_state_bit_equals_fresh_surviving_build(parity_setup):
+    """Acceptance: the purged state (codes, vectors, n_valid) is bit-exact
+    with a fresh ``build_group_state`` over the surviving corpus (live
+    base rows + surviving inserts), per p in {2, 1, 0.5}."""
+    p, data, weights, host, plan, _ = parity_setup
+    gi = int(np.argmax([g.n_members for g in plan.groups]))
+    w_in = int(plan.groups[gi].member_ids[0])
+    m = 12
+    rng = np.random.default_rng(13)
+    extra = (
+        data[rng.choice(len(data), m, replace=False)]
+        + rng.normal(0, 3.0, (m, plan.d))
+    ).astype(np.float32)
+    svc = _streaming_service(plan, data, reserve=32, seal_rows=4)
+    pids = [svc.insert(extra[j], w_in) for j in range(m)]
+    svc.compact()
+    drop_base = [3, 77]
+    drop_ins = [1, 6]
+    for b in drop_base:
+        svc.delete(b)
+    for j in drop_ins:
+        svc.delete(pids[j])
+    svc.compact(purge=True)
+
+    from repro.index.builder import build_group_state, seal_segment
+
+    cfg = svc.group_config(gi)
+    surv_base = np.setdiff1d(
+        np.arange(plan.n, dtype=np.int64), drop_base
+    )
+    keep = [j for j in range(m) if j not in drop_ins]
+    surv_vecs = extra[keep]
+    sealed_codes = seal_segment(cfg, plan.groups[gi], surv_vecs)
+    fresh = build_group_state(
+        svc.mesh, cfg, data, plan.groups[gi],
+        extra_points=surv_vecs, extra_codes=sealed_codes,
+        base_rows=surv_base,
+    )
+    got = svc.state_cache.acquire(gi)
+    try:
+        assert int(got.n_valid) == int(fresh.n_valid)
+        assert int(got.n_valid) == plan.n - len(drop_base) + len(keep)
+        np.testing.assert_array_equal(
+            np.asarray(got.codes), np.asarray(fresh.codes)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.points, np.float32),
+            np.asarray(fresh.points, np.float32),
+        )
+    finally:
+        svc.state_cache.release(gi)
+    # surviving rows answer bit-exactly through the compiled path
+    for j in keep:
+        r = svc.query(extra[j][None], [w_in])
+        assert r.ids[0][0] == pids[j] and r.dists[0][0] == 0.0
+    for j in drop_ins:
+        assert pids[j] not in svc.query(extra[j][None], [w_in]).ids[0]
+
+
 # --------------------------------------------------------- plan versioning
 
 
