@@ -21,6 +21,14 @@ through VMEM-sized blocks in two passes (lax.scan):
   pass 2  codes + vectors -> masked distances (L_freq <= j*) -> running
           local top-k -> all-gather -> global top-k
 
+Each scan step of both passes dispatches through ``ops.fused_query_block``
+— one launch per block computing level, distance and histogram/mask
+together, so the (q_loc, block) intermediates never round-trip through HBM
+between stages (Pallas kernel on TPU, a bit-exact fused XLA composite
+elsewhere; ``kernels.platform.resolve`` maps ``cfg.use_pallas`` onto the
+path).  ``use_pallas=False`` keeps the seed-era stage-by-stage scan as the
+parity oracle.
+
 Pass 2 recomputes L_freq instead of materializing the (Q, n_loc) int8
 matrix -- at beta/d ~ 4 this costs ~1.3x compute for ~0 bytes of HBM
 footprint; the single-pass per-level-candidate variant is evaluated in the
@@ -41,14 +49,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.sharding import shard_map_nocheck
-from ..kernels import ops
+from ..kernels import ops, ref
+from ..kernels import platform as kplatform
 from .config import IndexConfig
 
 __all__ = [
@@ -113,25 +121,13 @@ def shardings(mesh: Mesh):
     }
 
 
-def _log_c(x, c: int):
-    return jnp.log(x) / math.log(c)
-
-
-def _per_query_l2(q, w, pts):
-    """(q_loc, B) weighted l2 with per-query weights, via two matmuls."""
-    w2 = w * w
-    qw2 = jnp.sum(w2 * q * q, axis=-1)  # (q,)
-    cross = (w2 * q) @ pts.T  # (q, B)
-    onorm = w2 @ (pts * pts).T  # (q, B)
-    d2 = qw2[:, None] - 2.0 * cross + onorm
-    return jnp.sqrt(jnp.maximum(d2, 0.0))
-
-
-def _per_query_lp(q, w, pts, p: float):
-    diff = jnp.abs((q[:, None, :] - pts[None, :, :]) * w[:, None, :])
-    if abs(p - 1.0) < 1e-9:
-        return jnp.sum(diff, axis=-1)
-    return jnp.sum(diff**p, axis=-1) ** (1.0 / p)
+# The per-query distance helpers live in kernels.ref so the unfused scan
+# below and the fused XLA composite (ops.fused_query_block's reference
+# route) trace the *same* functions on the same block shapes — which is
+# what makes the two paths bit-exact (f32 gemms are shape-sensitive).
+_log_c = ref.log_c
+_per_query_l2 = ref.per_query_l2
+_per_query_lp = ref.per_query_lp
 
 
 def _query_shard(
@@ -157,6 +153,10 @@ def _query_shard(
 
     codes_blocks = state.codes.reshape(n_blocks, block, cfg.beta)
     point_blocks = state.points.reshape(n_blocks, block, cfg.d)
+    # use_pallas resolves to a concrete kernel path per backend (see
+    # kernels.platform): fused single-launch block steps by default, the
+    # seed-era unfused stage-by-stage scan as the use_pallas=False oracle.
+    path = kplatform.resolve(cfg.use_pallas)
 
     # Global row offsets per block: streaming states reserve row capacity
     # above the live count, and rows >= n_valid must vanish from both
@@ -180,9 +180,20 @@ def _query_shard(
         return jnp.where(row_ok[None, :], lf, jnp.int32(L + 1))
 
     # ---- pass 1: level histograms -> stop level ---------------------------
+    # Fused and unfused paths bin dead rows differently (excluded vs parked
+    # at L+1), but the stop logic below only reads bins 0..L, so stop /
+    # n_checked — and therefore ids/dists — are bit-identical either way.
     def pass1(carry, blk):
         hist_f, hist_g = carry
         cb, pb, boff = blk
+        if path.fused:
+            hf, hg = ops.fused_query_block(
+                cb, pb, codes_q, qf32, wf32, mu, r_min, beta_q,
+                boff=boff, n_valid=n_valid, c=c, n_levels=L, p=cfg.p,
+                use_pallas=path.pallas, interpret=path.interpret,
+                unroll=cfg.analysis_unroll,
+            )
+            return (hist_f + hf, hist_g + hg), None
         lf = _masked_freq_level(cb, boff)  # (q_loc, block)
         if abs(cfg.p - 2.0) < 1e-9:
             dist = _per_query_l2(qf32, wf32, pb.astype(jnp.float32))
@@ -228,12 +239,21 @@ def _query_shard(
     def pass2(carry, blk):
         vals, idx = carry
         cb, pb, boff = blk
-        lf = _masked_freq_level(cb, boff)
-        if abs(cfg.p - 2.0) < 1e-9:
-            dist = _per_query_l2(qf32, wf32, pb.astype(jnp.float32))
+        if path.fused:
+            scores = ops.fused_query_block(
+                cb, pb, codes_q, qf32, wf32, mu, r_min, beta_q,
+                boff=boff, n_valid=n_valid, c=c, n_levels=L, p=cfg.p,
+                stop=stop, use_pallas=path.pallas, interpret=path.interpret,
+                unroll=cfg.analysis_unroll,
+            )
         else:
-            dist = _per_query_lp(qf32, wf32, pb.astype(jnp.float32), cfg.p)
-        scores = jnp.where(lf <= stop[:, None], dist, jnp.inf)
+            lf = _masked_freq_level(cb, boff)
+            if abs(cfg.p - 2.0) < 1e-9:
+                dist = _per_query_l2(qf32, wf32, pb.astype(jnp.float32))
+            else:
+                dist = _per_query_lp(qf32, wf32, pb.astype(jnp.float32),
+                                     cfg.p)
+            scores = jnp.where(lf <= stop[:, None], dist, jnp.inf)
         bvals, bidx = jax.lax.top_k(-scores, k)
         bidx = bidx + boff
         vals = jnp.concatenate([vals, -bvals], axis=1)

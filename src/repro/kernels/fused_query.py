@@ -1,0 +1,297 @@
+"""Pallas TPU kernel: fused WLSH query block step (levels + distances).
+
+One launch per scan block replaces the seed pipeline's three (freq_level,
+weighted_lp, histogram / mask) with the (q, block) intermediates held in
+VMEM — the level matrix and the distance matrix never round-trip through
+HBM between stages, which is the memory traffic the LSH scoring pass is
+bound by.  Two modes, one per engine pass:
+
+  pass 1 (hist):   codes + points tile -> first-frequent level, weighted
+                   l_p distance, good-level ceil, and per-level one-hot
+                   histogram contributions (frequent + good), with the
+                   streaming ``n_valid`` dead-row mask folded in.
+  pass 2 (scores): codes + points tile -> first-frequent level + weighted
+                   l_p distances masked by the query's stop level, ready
+                   for the engine's running top-k.
+
+Grid: (Q, block/BN).  Query code row (1, beta) and point codes (BN, beta)
+stay whole in the lane axis, as do the (1, d)/(BN, d) vector tiles; the
+p = 2 distance runs the norms+matmul expansion on the MXU inside the
+kernel (two (1, d) x (d, BN) contractions), p != 2 is a VPU reduction.
+VMEM per grid step at BN=256, beta<=1024, d<=1024: ~1 MB codes + ~1 MB
+vectors + ~128 KB histogram scratch.  Per-query scalars (mu, beta_q,
+r_min / stop) ride in SMEM; the block's global row offset and the
+streaming row watermark are (1, 1) SMEM scalars shared by every cell.
+
+Histogram bins use a 128-lane-padded axis (``_nbins``); excluded rows
+(block padding or rows at/after ``n_valid``) land in bin n_levels + 2,
+which the ops wrapper slices off.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or pltpu.TPUCompilerParams)
+
+__all__ = ["fused_query_hist_pallas", "fused_query_scores_pallas", "nbins"]
+
+
+def nbins(n_levels: int) -> int:
+    """Lane-padded histogram width covering bins 0..n_levels+2."""
+    return 128 * math.ceil((n_levels + 3) / 128)
+
+
+def _floor_div(x, c: int):
+    # lax integer div truncates toward zero; emulate floor for negatives.
+    q = jax.lax.div(x, jnp.int32(c))
+    r = jax.lax.rem(x, jnp.int32(c))
+    neg = (r != 0) & ((r < 0) != (c < 0))
+    return q - jnp.where(neg, 1, 0).astype(jnp.int32)
+
+
+def _lf_and_dist(cq_ref, cp_ref, qpt_ref, ppt_ref, w_ref, mu_ref, bq_ref,
+                 *, c: int, n_levels: int, p: float):
+    """(1, BN) first-frequent level + (1, BN) weighted l_p distance."""
+    a = cp_ref[...].astype(jnp.int32)  # (BN, beta)
+    b = cq_ref[...].astype(jnp.int32)  # (1, beta)
+    mu = mu_ref[0, 0]
+    beta_q = bq_ref[0, 0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    lane_ok = (lane < beta_q).astype(jnp.int32)
+    never = jnp.int32(n_levels + 1)
+    out = jnp.full((1, a.shape[0]), never, jnp.int32)
+
+    def body(j, carry):
+        a, b, out = carry
+        cnt = jnp.sum((a == b).astype(jnp.int32) * lane_ok, axis=1)[None, :]
+        out = jnp.where((cnt >= mu) & (out == never), jnp.int32(j), out)
+        return (_floor_div(a, c), _floor_div(b, c), out)
+
+    _, _, lf = jax.lax.fori_loop(
+        0, n_levels + 1, body, (a, b, out), unroll=True
+    )
+
+    x = ppt_ref[...]  # (BN, d)
+    qv = qpt_ref[...]  # (1, d)
+    w = w_ref[...]  # (1, d)
+    if abs(p - 2.0) < 1e-9:
+        w2 = w * w
+        qw2 = jnp.sum(w2 * qv * qv)
+        cross = jax.lax.dot_general(
+            w2 * qv, x, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (1, BN)
+        onorm = jax.lax.dot_general(
+            w2, x * x, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (1, BN)
+        d2 = qw2 - 2.0 * cross + onorm
+        dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+    else:
+        diff = jnp.abs((qv - x) * w)  # (BN, d)
+        if abs(p - 1.0) < 1e-9:
+            dist = jnp.sum(diff, axis=1)[None, :]
+        else:
+            dist = (jnp.sum(diff**p, axis=1) ** (1.0 / p))[None, :]
+    return lf, dist
+
+
+def _row_ok(boff_ref, nvalid_ref, bn: int, n_rows: int):
+    """(1, BN) live-row mask: inside the unpadded block AND below n_valid."""
+    ip = pl.program_id(1)
+    row = ip * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    return (row < n_rows) & ((boff_ref[0, 0] + row) < nvalid_ref[0, 0])
+
+
+def _hist_kernel(cq_ref, cp_ref, qpt_ref, ppt_ref, w_ref, mu_ref, bq_ref,
+                 rmin_ref, boff_ref, nvalid_ref, of_ref, og_ref,
+                 accf_ref, accg_ref, *, c: int, n_levels: int, p: float,
+                 n_rows: int, n_tiles: int, n_bins: int):
+    ip = pl.program_id(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        accf_ref[...] = jnp.zeros_like(accf_ref)
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+
+    lf, dist = _lf_and_dist(cq_ref, cp_ref, qpt_ref, ppt_ref, w_ref,
+                            mu_ref, bq_ref, c=c, n_levels=n_levels, p=p)
+    bn = lf.shape[1]
+    ok = _row_ok(boff_ref, nvalid_ref, bn, n_rows)
+    excl = jnp.int32(n_levels + 2)
+    base = jnp.log(c * rmin_ref[0, 0]) / math.log(c)
+    jg = jnp.ceil(
+        jnp.maximum(jnp.log(jnp.maximum(dist, 1e-30)) / math.log(c) - base,
+                    0.0)
+    ).astype(jnp.int32)
+    lf_x = jnp.where(ok, lf, excl)
+    good = jnp.where(ok, jnp.maximum(lf, jg), excl)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (n_bins, bn), 0)
+    accf_ref[...] += jnp.sum((bins == lf_x).astype(jnp.int32), axis=1)[None, :]
+    accg_ref[...] += jnp.sum((bins == good).astype(jnp.int32), axis=1)[None, :]
+
+    @pl.when(ip == n_tiles - 1)
+    def _epilogue():
+        of_ref[...] = accf_ref[...]
+        og_ref[...] = accg_ref[...]
+
+
+def _scores_kernel(cq_ref, cp_ref, qpt_ref, ppt_ref, w_ref, mu_ref, bq_ref,
+                   stop_ref, boff_ref, nvalid_ref, o_ref, *, c: int,
+                   n_levels: int, p: float, n_rows: int):
+    lf, dist = _lf_and_dist(cq_ref, cp_ref, qpt_ref, ppt_ref, w_ref,
+                            mu_ref, bq_ref, c=c, n_levels=n_levels, p=p)
+    ok = _row_ok(boff_ref, nvalid_ref, lf.shape[1], n_rows)
+    keep = ok & (lf <= stop_ref[0, 0])
+    o_ref[...] = jnp.where(keep, dist, jnp.inf)
+
+
+def _specs(beta: int, d: int, bn: int):
+    """Common in_specs prefix: codes/vectors/weight tiles + SMEM scalars."""
+    smem_q = pl.BlockSpec(
+        (1, 1), lambda iq, ip: (iq, 0), memory_space=pltpu.SMEM
+    )
+    smem_g = pl.BlockSpec(
+        (1, 1), lambda iq, ip: (0, 0), memory_space=pltpu.SMEM
+    )
+    tiles = [
+        pl.BlockSpec((1, beta), lambda iq, ip: (iq, 0)),
+        pl.BlockSpec((bn, beta), lambda iq, ip: (ip, 0)),
+        pl.BlockSpec((1, d), lambda iq, ip: (iq, 0)),
+        pl.BlockSpec((bn, d), lambda iq, ip: (ip, 0)),
+        pl.BlockSpec((1, d), lambda iq, ip: (iq, 0)),  # per-query weight
+    ]
+    return tiles, smem_q, smem_g
+
+
+def _as_col(v, dtype):
+    return jnp.asarray(v, dtype).reshape(-1, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("c", "n_levels", "p", "bn", "n_rows", "interpret"),
+)
+def fused_query_hist_pallas(
+    codes_p,  # (B_pad, beta) int32
+    points,  # (B_pad, d) f32
+    codes_q,  # (Q, beta) int32
+    queries,  # (Q, d) f32
+    q_weight,  # (Q, d) f32
+    mu,  # (Q,) int32
+    beta_q,  # (Q,) int32
+    r_min,  # (Q,) f32
+    boff,  # () int32 global row offset of this block
+    n_valid,  # () int32 streaming live-row watermark
+    c: int,
+    n_levels: int,
+    p: float,
+    n_rows: int,  # live rows in the block before padding
+    bn: int = 256,
+    interpret: bool = False,
+):
+    """Pass-1 fused block step -> (hist_f, hist_g), each (Q, nbins)."""
+    b_pad, beta = codes_p.shape
+    q, d = queries.shape
+    bn = min(bn, b_pad)
+    assert b_pad % bn == 0, "caller (ops.py) must pad rows to block multiples"
+    n_tiles = b_pad // bn
+    n_bins = nbins(n_levels)
+    kernel = functools.partial(
+        _hist_kernel, c=int(c), n_levels=int(n_levels), p=float(p),
+        n_rows=int(n_rows), n_tiles=n_tiles, n_bins=n_bins,
+    )
+    tiles, smem_q, smem_g = _specs(beta, d, bn)
+    out_spec = pl.BlockSpec((1, n_bins), lambda iq, ip: (iq, 0))
+    out_shape = jax.ShapeDtypeStruct((q, n_bins), jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=(q, n_tiles),
+        in_specs=tiles + [smem_q, smem_q, smem_q, smem_g, smem_g],
+        out_specs=(out_spec, out_spec),
+        out_shape=(out_shape, out_shape),
+        scratch_shapes=[
+            pltpu.VMEM((1, n_bins), jnp.int32),
+            pltpu.VMEM((1, n_bins), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+    )(
+        codes_q.astype(jnp.int32),
+        codes_p.astype(jnp.int32),
+        queries.astype(jnp.float32),
+        points.astype(jnp.float32),
+        q_weight.astype(jnp.float32),
+        _as_col(mu, jnp.int32),
+        _as_col(beta_q, jnp.int32),
+        _as_col(r_min, jnp.float32),
+        _as_col(boff, jnp.int32),
+        _as_col(n_valid, jnp.int32),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("c", "n_levels", "p", "bn", "n_rows", "interpret"),
+)
+def fused_query_scores_pallas(
+    codes_p,  # (B_pad, beta) int32
+    points,  # (B_pad, d) f32
+    codes_q,  # (Q, beta) int32
+    queries,  # (Q, d) f32
+    q_weight,  # (Q, d) f32
+    mu,  # (Q,) int32
+    beta_q,  # (Q,) int32
+    stop,  # (Q,) int32 per-query stop level
+    boff,  # () int32
+    n_valid,  # () int32
+    c: int,
+    n_levels: int,
+    p: float,
+    n_rows: int,
+    bn: int = 256,
+    interpret: bool = False,
+):
+    """Pass-2 fused block step -> (Q, B_pad) stop-masked distances."""
+    b_pad, beta = codes_p.shape
+    q, d = queries.shape
+    bn = min(bn, b_pad)
+    assert b_pad % bn == 0, "caller (ops.py) must pad rows to block multiples"
+    kernel = functools.partial(
+        _scores_kernel, c=int(c), n_levels=int(n_levels), p=float(p),
+        n_rows=int(n_rows),
+    )
+    tiles, smem_q, smem_g = _specs(beta, d, bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(q, b_pad // bn),
+        in_specs=tiles + [smem_q, smem_q, smem_q, smem_g, smem_g],
+        out_specs=pl.BlockSpec((1, bn), lambda iq, ip: (iq, ip)),
+        out_shape=jax.ShapeDtypeStruct((q, b_pad), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+    )(
+        codes_q.astype(jnp.int32),
+        codes_p.astype(jnp.int32),
+        queries.astype(jnp.float32),
+        points.astype(jnp.float32),
+        q_weight.astype(jnp.float32),
+        _as_col(mu, jnp.int32),
+        _as_col(beta_q, jnp.int32),
+        _as_col(stop, jnp.int32),
+        _as_col(boff, jnp.int32),
+        _as_col(n_valid, jnp.int32),
+    )

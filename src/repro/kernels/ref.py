@@ -10,11 +10,21 @@ outputs) or to float tolerance (distances).  Shapes:
                     level-c^j buckets); n_levels + 1 if never frequent.
   count_level_ref : collision counts at one fixed level (faithful C2LSH)
   weighted_lp_ref : (Q, d) x (n, d) -> (Q, n) distances under weight W
+
+The fused-query oracles (``fused_query_hist_ref`` / ``fused_query_scores_ref``)
+define the semantics of one fused block step — first-frequent level, weighted
+distance, good-level histogramming and stop-mask scoring in one composite.
+They are also the *serving* fused path off-TPU: the engine's unfused scan uses
+the exact same ``per_query_l2`` / ``per_query_lp`` helpers on the exact same
+block shapes, so the fused XLA composite is bit-exact with the unfused oracle
+by construction (same HLO subgraphs — f32 gemm results are only reproducible
+at fixed shapes, which is why sharing these helpers matters).
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +34,12 @@ __all__ = [
     "freq_level_ref",
     "count_level_ref",
     "weighted_lp_ref",
+    "log_c",
+    "per_query_l2",
+    "per_query_lp",
+    "per_query_dist",
+    "fused_query_hist_ref",
+    "fused_query_scores_ref",
 ]
 
 
@@ -106,3 +122,105 @@ def weighted_lp_ref(queries, points, weight, p: float):
     if abs(p - 1.0) < 1e-9:
         return jnp.sum(diff, axis=-1)
     return jnp.sum(diff**p, axis=-1) ** (1.0 / p)
+
+
+# --------------------------------------------------- fused query-step oracles
+
+
+def log_c(x, c: int):
+    """log base c, the virtual-rehashing level scale."""
+    return jnp.log(x) / math.log(c)
+
+
+def per_query_l2(q, w, pts):
+    """(Q, B) weighted l2 with per-query weights, via two matmuls (MXU)."""
+    w2 = w * w
+    qw2 = jnp.sum(w2 * q * q, axis=-1)  # (Q,)
+    cross = (w2 * q) @ pts.T  # (Q, B)
+    onorm = w2 @ (pts * pts).T  # (Q, B)
+    d2 = qw2[:, None] - 2.0 * cross + onorm
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def per_query_lp(q, w, pts, p: float):
+    """(Q, B) weighted l_p (p != 2) with per-query weights, elementwise."""
+    diff = jnp.abs((q[:, None, :] - pts[None, :, :]) * w[:, None, :])
+    if abs(p - 1.0) < 1e-9:
+        return jnp.sum(diff, axis=-1)
+    return jnp.sum(diff**p, axis=-1) ** (1.0 / p)
+
+
+def per_query_dist(q, w, pts, p: float):
+    """Per-query-weight distance dispatch shared by every engine path.
+
+    The unfused scan and the fused XLA composite must call this very
+    function on the same shapes — that is what makes them bit-exact (f32
+    gemms are shape-sensitive in the last ulp).
+    """
+    if abs(p - 2.0) < 1e-9:
+        return per_query_l2(q, w, pts)
+    return per_query_lp(q, w, pts, p)
+
+
+def _fused_lf(codes_b, codes_q, mu, beta_q, row_ok, c, n_levels, unroll):
+    """(Q, B) first-frequent level with excluded rows forced to L + 2.
+
+    Excluded rows (padding or rows at/after the streaming ``n_valid``
+    watermark) get the sentinel ``n_levels + 2`` — past every histogram
+    bin the stop logic reads (0..n_levels) and past every reachable stop
+    level, so they vanish from both passes.  (The unfused engine parks
+    dead rows at ``n_levels + 1`` instead; bins 0..n_levels and the final
+    scores are identical either way.)
+    """
+    lf = freq_level_ref(codes_b, codes_q, mu, c, n_levels, beta_q,
+                        unroll=unroll)
+    return jnp.where(row_ok[None, :], lf, jnp.int32(n_levels + 2))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "n_levels", "p", "unroll")
+)
+def fused_query_hist_ref(codes_b, points_b, codes_q, queries, q_weight, mu,
+                         beta_q, r_min, row_ok, c: int, n_levels: int,
+                         p: float, unroll: bool = False):
+    """Pass-1 fused block step: (hist_f, hist_g) contributions, (Q, L+3).
+
+    One block of codes/points in, per-level frequent and good histogram
+    contributions out — level computation, distance, good-level ceil and
+    one-hot binning in a single composite.  Bin L+2 collects excluded
+    rows and is sliced off by the caller.
+    """
+    L = n_levels
+    lf = _fused_lf(codes_b, codes_q, mu, beta_q, row_ok, c, L, unroll)
+    dist = per_query_dist(queries, q_weight, points_b, p)
+    jg = jnp.ceil(
+        jnp.maximum(log_c(jnp.maximum(dist, 1e-30), c)
+                    - log_c(c * r_min, c)[:, None], 0.0)
+    ).astype(jnp.int32)
+    good = jnp.where(row_ok[None, :], jnp.maximum(lf, jg), jnp.int32(L + 2))
+    levels = jnp.arange(L + 3, dtype=jnp.int32)
+    hist_f = jnp.sum(
+        (lf[:, :, None] == levels[None, None, :]).astype(jnp.int32), axis=1
+    )
+    hist_g = jnp.sum(
+        (good[:, :, None] == levels[None, None, :]).astype(jnp.int32), axis=1
+    )
+    return hist_f, hist_g
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "n_levels", "p", "unroll")
+)
+def fused_query_scores_ref(codes_b, points_b, codes_q, queries, q_weight, mu,
+                           beta_q, stop, row_ok, c: int, n_levels: int,
+                           p: float, unroll: bool = False):
+    """Pass-2 fused block step: (Q, B) stop-masked weighted distances.
+
+    Rows whose first-frequent level exceeds the query's stop level — and
+    every excluded row — score +inf, ready for the engine's running
+    top-k.  ``stop <= n_levels`` always, so the L+2 exclusion sentinel
+    can never pass the mask.
+    """
+    lf = _fused_lf(codes_b, codes_q, mu, beta_q, row_ok, c, n_levels, unroll)
+    dist = per_query_dist(queries, q_weight, points_b, p)
+    return jnp.where(lf <= stop[:, None], dist, jnp.inf)

@@ -58,6 +58,7 @@ import numpy as np
 from ..core.datagen import make_dataset, make_weight_set
 from ..core.params import PlanConfig
 from ..core.wlsh import WLSHIndex
+from ..kernels import platform as kernel_platform
 from ..serving.async_service import (
     AsyncRetrievalService,
     ManualClock,
@@ -182,16 +183,14 @@ def run(args) -> dict:
     reserve = args.delta_reserve_rows
     if reserve is None:  # headroom for every op turning out to be an insert
         reserve = args.n_queries if args.insert_rate > 0 else 0
-    svc = RetrievalService(
-        plan, data,
-        cfg=ServiceConfig(k=args.k, q_batch=args.q_batch,
-                          max_delay_ms=args.max_delay_ms,
-                          max_resident_groups=args.max_resident_groups,
-                          device_budget_bytes=args.device_budget,
-                          delta_seal_rows=args.delta_seal_rows,
-                          delta_reserve_rows=reserve,
-                          use_pallas=False if args.no_pallas else None),
-    )
+    scfg = ServiceConfig(k=args.k, q_batch=args.q_batch,
+                         max_delay_ms=args.max_delay_ms,
+                         max_resident_groups=args.max_resident_groups,
+                         device_budget_bytes=args.device_budget,
+                         delta_seal_rows=args.delta_seal_rows,
+                         delta_reserve_rows=reserve,
+                         use_pallas=args.use_pallas)
+    svc = RetrievalService(plan, data, cfg=scfg)
     svc.warmup()
     t_build = time.time() - t0
     cache0 = svc.cache_summary()
@@ -201,6 +200,8 @@ def run(args) -> dict:
           f"{svc.step_cache.n_compiled} compiled steps "
           f"(shape sharing {plan.n_groups}/{svc.step_cache.n_compiled}) "
           f"in {t_build:.1f}s")
+    print(f"kernels: {kernel_platform.describe(scfg.use_pallas)} "
+          f"(--use-pallas {args.use_pallas})")
     svc.reset_stats()  # serve-phase cache counters exclude warmup churn
 
     # ---- serve --------------------------------------------------------------
@@ -456,8 +457,24 @@ def parse_args(argv=None):
                     metavar="BYTES",
                     help="page group states under this device byte budget "
                          "(accepts 512MB / 2GB / plain bytes)")
-    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--use-pallas", choices=["auto", "on", "off",
+                                             "interpret"], default=None,
+                    help="query kernel path: auto = per-backend fused "
+                         "default (compiled Pallas where supported, fused "
+                         "XLA composite elsewhere), on = fused Pallas "
+                         "(interpret off-TPU), off = unfused reference "
+                         "stages, interpret = fused Pallas in interpret "
+                         "mode (kernel body, any backend)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="shorthand for --use-pallas off")
     args = ap.parse_args(argv)
+    if args.no_pallas:
+        if args.use_pallas not in (None, "off"):
+            ap.error("--no-pallas contradicts --use-pallas "
+                     f"{args.use_pallas}")
+        args.use_pallas = "off"
+    if args.use_pallas is None:
+        args.use_pallas = "auto"
     if not 0.0 <= args.insert_rate <= 1.0:
         ap.error(f"--insert-rate must be in [0, 1], got {args.insert_rate}")
     if args.driver and not args.use_async:

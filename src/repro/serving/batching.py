@@ -67,7 +67,10 @@ class ServiceConfig:
     q_batch: int = 8  # compiled batch shape; ragged tails are padded
     block_n: int | None = None  # points per scan block; None = whole shard
     vec_dtype: str = "float32"
-    use_pallas: bool | None = None  # None = auto (TPU only)
+    use_pallas: bool | str | None = None  # kernel path (kernels.platform):
+    # None/"auto" = per-backend fused default, True/"on" = fused Pallas
+    # (interpret off-TPU), False/"off" = unfused oracle, "interpret" =
+    # fused Pallas interpret mode; CLI strings are normalized below
     beta_buckets: tuple[int, ...] | None = None  # None = config.pad_beta
     level_step: int = 4  # level-loop bound rounding (config.pad_levels)
     budget_override: int | None = None  # None = k + ceil(gamma * n)
@@ -93,6 +96,19 @@ class ServiceConfig:
     # pending buffers; submit raises Overloaded instead of growing unbounded
 
     def __post_init__(self):
+        # normalize the CLI spellings onto the IndexConfig values (frozen
+        # dataclass, hence object.__setattr__)
+        up = self.use_pallas
+        if isinstance(up, str):
+            up = {"auto": None, "on": True, "off": False}.get(
+                up.lower(), up.lower()
+            )
+            object.__setattr__(self, "use_pallas", up)
+        if up not in (None, True, False, "interpret"):
+            raise ValueError(
+                f"use_pallas must be one of auto/on/off/interpret (or "
+                f"None/True/False), got {self.use_pallas!r}"
+            )
         if self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
         if self.q_batch < 1:

@@ -7,6 +7,8 @@ the production dry-run.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -129,6 +131,53 @@ def test_engine_self_query(setup):
     )
     np.testing.assert_array_equal(np.asarray(ids)[:, 0], pids)
     assert np.all(np.asarray(dists)[:, 0] < 1e-3)
+
+
+@pytest.mark.parametrize("mode", [None, "interpret"], ids=["auto", "interpret"])
+def test_engine_fused_paths_bit_exact(setup, mode):
+    """Fused query step (auto/XLA composite and Pallas interpret) must be
+    bit-exact with the unfused oracle: same ids, dists, stop levels and
+    n_checked.  The exact re-rank plus identical candidate sets absorb any
+    kernel-internal float jitter, so equality is exact, not approximate."""
+    data, weights, cfg, host, mesh = setup
+    k = 5
+    gi = int(host.part.group_of[0])
+    icfg, state, step, built = _engine_for_group(host, mesh, gi, data, k)
+
+    wids = [int(w) for w in built.plan.member_ids[:4]]
+    nq = len(wids)
+    rng = np.random.default_rng(47)
+    qpts = data[rng.choice(len(data), nq, replace=False)].astype(np.float32)
+    qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+    q_weight = np.stack([host.weights[w] for w in wids]).astype(np.float32)
+    mus, r_mins, betas, levels = [], [], [], []
+    for w in wids:
+        _, slot, beta_i, mu_i = host._member_params(w)
+        mus.append(mu_i)
+        r_mins.append(built.plan.r_min_members[slot])
+        betas.append(beta_i)
+        levels.append(int(built.plan.n_levels[slot]))
+    args = (
+        jnp.asarray(qpts),
+        encode_queries(state, qpts),
+        jnp.asarray(q_weight),
+        jnp.asarray(mus, jnp.int32),
+        jnp.asarray(r_mins, jnp.float32),
+        jnp.asarray(betas, jnp.int32),
+        jnp.asarray(levels, jnp.int32),
+    )
+    want = step(state, *args)  # the unfused oracle (use_pallas=False)
+
+    fcfg = dataclasses.replace(icfg, use_pallas=mode)
+    fstate = build_state(mesh, fcfg, data, built.fam)
+    fstep = make_query_step(mesh, fcfg)
+    got = fstep(fstate, *args)
+
+    for name, a, b in zip(("dists", "ids", "stop", "n_checked"), want, got):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"fused path ({mode}) diverged from unfused on {name}",
+        )
 
 
 def test_budget_derived_from_gamma():

@@ -5,7 +5,14 @@ Per the kernel contract:
   * hash_encode: exact match except at floor boundaries, where independent
     f32 summation orders may legitimately differ by one bucket (|diff| <= 1
     and only where the pre-floor value is within eps of an integer);
-  * weighted_lp: allclose in f32.
+  * weighted_lp: allclose in f32;
+  * fused_query_block: histograms exact-int; scores carry an identical
+    +inf stop-mask and are bit-exact for p != 2 when d is already a lane
+    multiple (no padding), else ulp-tight allclose — padding d changes
+    the f32 reduction tree, and the p = 2 in-body MXU expansion may
+    differ from the XLA gemm in the last ulp.  (Serving bit-exactness
+    does not rest on this: off-TPU the fused path is the XLA composite
+    in ref.py, which shares the unfused engine's helpers exactly.)
 
 All Pallas calls run with interpret=True on CPU (the kernel body itself is
 executed), matching how the kernels are validated off-TPU.
@@ -198,6 +205,155 @@ def test_property_freq_level_pallas_equals_ref(n, beta, q, c, seed):
     b = np.array(ops.freq_level(cp, cq, mu, c=c, n_levels=L, use_pallas=True,
                                 interpret=True, bn=64))
     np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------- fused query block step
+
+# Smaller than _SHAPES: interpret mode runs the grid in Python, and the
+# fused kernel re-runs per p.  (257, 33, ...) keeps wrapper padding (row
+# and d non-multiples of bn=128) in the sweep.
+_FUSED_SHAPES = [
+    (64, 16, 24, 4),  # (n, d, beta, Q)
+    (257, 33, 70, 3),
+    (96, 128, 24, 3),  # d a lane multiple: the bit-exact p != 2 case
+]
+_PS = [2.0, 1.0, 0.5]
+
+
+def _mk_fused(n, d, beta, Q, seed=0):
+    rng = np.random.default_rng(seed)
+    cp = rng.integers(-(2**16), 2**16, (n, beta)).astype(np.int32)
+    cq = rng.integers(-(2**16), 2**16, (Q, beta)).astype(np.int32)
+    pts = rng.uniform(0, 1000, (n, d)).astype(np.float32)
+    qs = rng.uniform(0, 1000, (Q, d)).astype(np.float32)
+    qw = rng.uniform(1, 10, (Q, d)).astype(np.float32)
+    mu = rng.integers(1, max(2, beta // 3), Q).astype(np.int32)
+    beta_q = rng.integers(max(1, beta // 2), beta + 1, Q).astype(np.int32)
+    r_min = rng.uniform(10.0, 200.0, Q).astype(np.float32)
+    stop = rng.integers(0, 9, Q).astype(np.int32)
+    return cp, cq, pts, qs, qw, mu, beta_q, r_min, stop
+
+
+def _fused_both(shape, p, *, boff, n_valid, stop=None, seed=0, bn=128):
+    """(ref-route result, pallas-interpret result) for one config."""
+    n, d, beta, Q = shape
+    cp, cq, pts, qs, qw, mu, beta_q, r_min, st_ = _mk_fused(
+        n, d, beta, Q, seed=seed)
+    if stop is not None:
+        stop = st_
+    kw = dict(boff=boff, n_valid=n_valid, c=2, n_levels=8, p=p, stop=stop)
+    got_ref = ops.fused_query_block(cp, pts, cq, qs, qw, mu, r_min, beta_q,
+                                    use_pallas=False, **kw)
+    got_pal = ops.fused_query_block(cp, pts, cq, qs, qw, mu, r_min, beta_q,
+                                    use_pallas=True, interpret=True, bn=bn,
+                                    **kw)
+    return got_ref, got_pal
+
+
+@pytest.mark.parametrize("shape", _FUSED_SHAPES, ids=str)
+@pytest.mark.parametrize("p", _PS)
+def test_fused_hist_pallas_equals_ref(shape, p):
+    n = shape[0]
+    (hf0, hg0), (hf1, hg1) = _fused_both(shape, p, boff=0, n_valid=n)
+    np.testing.assert_array_equal(np.array(hf0), np.array(hf1))
+    np.testing.assert_array_equal(np.array(hg0), np.array(hg1))
+    # every live row lands in exactly one frequent bin; good rows are a
+    # prefix-dominated subset (good = max(lf, jg) >= lf; rows whose good
+    # level overflows the kept bins drop out of hist_g entirely)
+    assert np.all(np.array(hf0).sum(axis=1) == n)
+    assert np.all(np.array(hg0).sum(axis=1) <= n)
+    assert np.all(np.cumsum(hg0, axis=1) <= np.cumsum(hf0, axis=1))
+
+
+@pytest.mark.parametrize("shape", _FUSED_SHAPES, ids=str)
+@pytest.mark.parametrize("p", _PS)
+def test_fused_scores_pallas_equals_ref(shape, p):
+    n = shape[0]
+    s0, s1 = _fused_both(shape, p, boff=0, n_valid=n, stop=True)
+    s0, s1 = np.array(s0), np.array(s1)
+    fin = np.isfinite(s0)
+    np.testing.assert_array_equal(fin, np.isfinite(s1))  # same stop mask
+    if abs(p - 2.0) < 1e-9:
+        np.testing.assert_allclose(s0[fin], s1[fin], rtol=2e-4, atol=2e-2)
+    elif shape[1] % 128 == 0:
+        np.testing.assert_array_equal(s0[fin], s1[fin])  # bit-exact, no pad
+    else:  # d-padding changes the f32 reduction tree: ulp-tight only
+        np.testing.assert_allclose(s0[fin], s1[fin], rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("p", _PS)
+def test_fused_streaming_watermark(p):
+    """Rows at/after n_valid vanish from hists and score +inf, both paths.
+
+    boff puts the block mid-stream so the watermark cuts it at row 21 of
+    64: a streaming state serving with n_valid below capacity.
+    """
+    shape = (64, 16, 24, 4)
+    boff, n_valid = 1000, 1021  # rows 21.. of this block are dead
+    live = n_valid - boff
+    (hf0, hg0), (hf1, hg1) = _fused_both(shape, p, boff=boff,
+                                         n_valid=n_valid)
+    np.testing.assert_array_equal(np.array(hf0), np.array(hf1))
+    np.testing.assert_array_equal(np.array(hg0), np.array(hg1))
+    assert np.all(np.array(hf0).sum(axis=1) == live)
+    assert np.all(np.array(hg0).sum(axis=1) <= live)
+    s0, s1 = _fused_both(shape, p, boff=boff, n_valid=n_valid, stop=True)
+    s0, s1 = np.array(s0), np.array(s1)
+    assert np.all(np.isinf(s0[:, live:])) and np.all(np.isinf(s1[:, live:]))
+    np.testing.assert_array_equal(np.isfinite(s0), np.isfinite(s1))
+
+
+def test_fused_ref_matches_unfused_stages():
+    """The fused XLA composite vs the seed-era separate stages.
+
+    Pins the bit-exact-by-construction property the engine relies on:
+    same distance helpers, same shapes -> identical bins 0..L and
+    identical stop-masked scores (dead-row parking differs only in bins
+    the stop logic never reads: unfused L+1 vs fused's sliced-off L+2).
+    """
+    n, d, beta, Q = 300, 40, 70, 9
+    c, L = 2, 8
+    cp, cq, pts, qs, qw, mu, beta_q, r_min, stop = _mk_fused(
+        n, d, beta, Q, seed=11)
+    n_valid = n - 17
+    row_ok = np.arange(n) < n_valid
+    for p in _PS:
+        hf, hg = ops.fused_query_block(
+            cp, pts, cq, qs, qw, mu, r_min, beta_q, boff=0, n_valid=n_valid,
+            c=c, n_levels=L, p=p, use_pallas=False)
+        lf = np.array(ops.freq_level(cp, cq, mu, c=c, n_levels=L,
+                                     beta_q=beta_q, use_pallas=False))
+        dist = np.array(ref.per_query_dist(jnp.asarray(qs), jnp.asarray(qw),
+                                           jnp.asarray(pts), p))
+        jg = np.ceil(np.maximum(
+            np.log(np.maximum(dist, 1e-30)) / np.log(c)
+            - np.log(c * r_min)[:, None] / np.log(c), 0.0)).astype(np.int64)
+        good = np.maximum(lf, jg)
+        for bins, fused in ((lf, np.array(hf)), (good, np.array(hg))):
+            for j in range(L + 1):  # bins the stop logic reads
+                want = ((bins == j) & row_ok[None, :]).sum(axis=1)
+                np.testing.assert_array_equal(fused[:, j], want)
+        scores = np.array(ops.fused_query_block(
+            cp, pts, cq, qs, qw, mu, r_min, beta_q, boff=0, n_valid=n_valid,
+            c=c, n_levels=L, p=p, stop=stop, use_pallas=False))
+        want = np.where((lf <= stop[:, None]) & row_ok[None, :], dist, np.inf)
+        np.testing.assert_array_equal(scores, want)  # bit-exact, shared HLO
+
+
+def test_fused_scalar_broadcast_and_default_beta():
+    """Scalar mu/r_min/stop and beta_q=None broadcast like arrays."""
+    n, d, beta, Q = 64, 16, 24, 4
+    cp, cq, pts, qs, qw, *_ = _mk_fused(n, d, beta, Q, seed=12)
+    kw = dict(boff=0, n_valid=n, c=2, n_levels=8, p=1.0)
+    a = ops.fused_query_block(cp, pts, cq, qs, qw, 3, 50.0, None,
+                              use_pallas=False, **kw)
+    b = ops.fused_query_block(cp, pts, cq, qs, qw,
+                              np.full(Q, 3, np.int32),
+                              np.full(Q, 50.0, np.float32),
+                              np.full(Q, beta, np.int32),
+                              use_pallas=False, **kw)
+    np.testing.assert_array_equal(np.array(a[0]), np.array(b[0]))
+    np.testing.assert_array_equal(np.array(a[1]), np.array(b[1]))
 
 
 def test_hash_encode_matches_host_family():
