@@ -34,19 +34,34 @@ pins a baseline for that path:
            their deadline launches: state hit rate rises, deadline-miss
            rate (deadline expired while the state was off-device) falls,
            answers bit-exact throughout
+  sweep 7  sharded group states: the same workload served at n_shards in
+           {1, 2, 4, 8} on a forced 8-device CPU mesh (each shard count
+           runs in a child process so XLA_FLAGS lands before jax
+           initialises).  Row capacity pads to a common block multiple,
+           so every shard count runs identical per-block gemms and the
+           answers are bit-exact across shard counts — on one
+           oversubscribed CPU the throughput column prices the
+           collective overhead, not a speedup
 
 Validation checks assert the structural claims future PRs must not regress:
 compiled steps stay below group count (shape-bucket sharing), full batches
 beat 1-query submissions on throughput, the async frontend answers the
 trace bit-exactly, deadline batching lifts mean occupancy over
 single-submission on every swept configuration, paging stays bit-exact
-with live eviction/restore traffic below full residency, and prefetch
-strictly improves the hit rate and miss rate at the same budget.
+with live eviction/restore traffic below full residency, prefetch
+strictly improves the hit rate and miss rate at the same budget, and
+sharded serving answers bit-identically at every shard count.
 
     PYTHONPATH=src python -m benchmarks.run --only serve_bench
 """
 
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 
@@ -94,6 +109,82 @@ def _traffic(data, weight_ids_pool, n_queries, rng):
     )
     qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
     return qpts, wids
+
+
+_SHARD_DEVICES = 8
+
+# Child body for sweep 7.  Each shard count needs its own process:
+# XLA_FLAGS must be set before jax initialises, and the parent keeps the
+# single real CPU device.  2011 live rows pad (5 reserve rows) to
+# 2016 = 32 * 63, so shards in {1, 2, 4, 8} all run (q, 63, d) block
+# gemms — the structural precondition for bit-exact answers across
+# shard counts (f32 matmuls are shape-sensitive).
+_SHARD_CHILD = """
+    import json, time
+    import numpy as np
+    from repro.core.datagen import make_dataset, make_weight_set
+    from repro.core.params import PlanConfig
+    from repro.core.wlsh import WLSHIndex
+    from repro.serving.retrieval import RetrievalService, ServiceConfig
+
+    SHARDS = %(shards)d
+    data = make_dataset(n=2011, d=24, seed=7)
+    weights = make_weight_set(size=16, d=24, n_subset=8, n_subrange=10,
+                              seed=8)
+    cfg = PlanConfig(p=2.0, c=3, n=len(data), gamma_n=100.0)
+    host = WLSHIndex(data, weights, cfg, tau=500.0, v=6, v_prime=6,
+                     seed=9)
+    plan = host.export_serving_plan()
+    svc = RetrievalService(plan, data, cfg=ServiceConfig(
+        k=%(k)d, q_batch=%(q_batch)d, block_n=63, delta_reserve_rows=5,
+        n_shards=SHARDS, use_pallas=False))
+    assert svc.mesh.size == SHARDS
+    svc.warmup()
+    rng = np.random.default_rng(11)
+    NQ = %(nq)d
+    wids = rng.integers(0, len(weights), NQ)
+    qpts = data[rng.choice(len(data), NQ, replace=False)].astype(
+        np.float32)
+    qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+    svc.query(qpts[:%(q_batch)d], wids[:%(q_batch)d])  # warm dispatch
+    svc.reset_stats()
+    t0 = time.perf_counter()
+    res = svc.query(qpts, wids)
+    dt = time.perf_counter() - t0
+    print(json.dumps({
+        "shards": SHARDS,
+        "qps": NQ / dt,
+        "rows_per_shard": svc.batcher.row_capacity() // svc.mesh.size,
+        "occupancy": float(svc.mean_occupancy()),
+        "compiled_steps": svc.step_cache.n_compiled,
+        "ids": res.ids.tolist(),
+        "n_checked": res.n_checked.tolist(),
+    }))
+"""
+
+
+def _shard_child(shards: int, k: int, q_batch: int, nq: int) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_SHARD_DEVICES}"
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    code = textwrap.dedent(_SHARD_CHILD) % {
+        "shards": shards, "k": k, "q_batch": q_batch, "nq": nq,
+    }
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"shard child (shards={shards}) failed:\n"
+            f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+        )
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def run(full: bool = False) -> dict:
@@ -362,6 +453,33 @@ def run(full: bool = False) -> dict:
         rows_sched,
     )
 
+    # ---- sweep 7: sharded group states on a forced 8-device CPU mesh --------
+    # fixed-size workload regardless of --full: each shard count pays a
+    # fresh child-process jax init, and the claim being pinned is
+    # bit-exactness + the collective-overhead trend, not absolute q/s
+    rows_shard = []
+    shard_exact = True
+    shard_base = None
+    for shards in (1, 2, 4, 8):
+        out = _shard_child(shards, k=K, q_batch=Q_BATCH, nq=n_queries)
+        if shard_base is None:
+            shard_base = out
+        shard_exact &= bool(
+            out["ids"] == shard_base["ids"]
+            and out["n_checked"] == shard_base["n_checked"]
+        )
+        rows_shard.append([
+            shards, out["rows_per_shard"], out["qps"],
+            out["occupancy"], out["compiled_steps"],
+        ])
+    print_table(
+        "sharded serving vs shard count "
+        f"({_SHARD_DEVICES}-device forced CPU mesh, "
+        f"{'bit-exact' if shard_exact else 'MISMATCH'} across counts)",
+        ["shards", "rows/shard", "q/s", "occupancy", "compiled steps"],
+        rows_shard,
+    )
+
     qps_full = rows_occ[-1][2]
     qps_single = rows_occ[0][2]
     occ_async_min = min(r[2] for r in rows_async)
@@ -451,6 +569,19 @@ def run(full: bool = False) -> dict:
                      "already on device (miss rate 0)",
             "ok": bool(sched_stats["on"][1] == 0.0),
         },
+        {
+            "check": "sharded answers (ids, n_checked) bit-exact across "
+                     "shard counts {1, 2, 4, 8} on the forced 8-device "
+                     "mesh",
+            "ok": shard_exact,
+        },
+        {
+            "check": "each shard holds exactly capacity / n_shards rows "
+                     "(strict placement, no replication)",
+            "ok": bool(all(
+                r[0] * r[1] == rows_shard[0][1] for r in rows_shard
+            )),
+        },
     ]
     for v in validation:
         print(("PASS " if v["ok"] else "FAIL ") + v["check"])
@@ -490,6 +621,12 @@ def run(full: bool = False) -> dict:
             "n_evictions", "n_restores", "qps",
         ],
         "scheduler_paging_cap": cap6,
+        "sharding_sweep": rows_shard,
+        "sharding_sweep_columns": [
+            "n_shards", "rows_per_shard", "qps", "occupancy",
+            "n_compiled_steps",
+        ],
+        "sharding_forced_devices": _SHARD_DEVICES,
         "validation": validation,
     }
     save("serve_bench", payload)

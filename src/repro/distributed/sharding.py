@@ -3,12 +3,19 @@
 Every tensor dimension is tagged with a logical name; ``spec()`` maps names
 to mesh axes with a divisibility fallback (a dimension that does not divide
 by its mesh axes is replicated — e.g. musicgen's 24 heads on a 16-wide
-model axis).  Rules:
+model axis).  The fallback warns once per (name, shape) — a silently
+replicated dimension multiplies the per-device footprint by the mesh size,
+which for serving-state rows would turn an 8-way shard into 8 full
+replicas; layers that cannot afford that (the group-sharding layer) pass
+``strict=True`` to make non-divisibility an error instead.  Rules:
 
   batch    -> ("pod", "data")     data parallel
   fsdp     -> ("pod", "data")     parameter/optimizer sharding (ZeRO-3)
   model    -> ("model",)          tensor parallel (Megatron column/row)
   heads/kv_heads/ff/vocab/experts -> ("model",)
+  rows     -> ("pod", "data", "model")  serving-state point rows (the WLSH
+              group states shard rows over every mesh axis, see
+              distributed.group_sharding)
   seq      -> ()                  (("pod","data") for seq-sharded KV caches)
   layers/None -> replicated
 
@@ -19,6 +26,7 @@ KV-cache sequence over the data axes because batch == 1).
 from __future__ import annotations
 
 import contextlib
+import warnings
 from typing import Iterable
 
 import jax
@@ -60,6 +68,7 @@ _DEFAULT_RULES: dict[str | None, tuple[str, ...]] = {
     "ff": ("model",),
     "vocab": ("model",),
     "experts": ("model",),
+    "rows": ("pod", "data", "model"),
     "seq": (),
     "act_seq": ("model",),  # Megatron-SP residual stream between layers
     "kv_seq": (),
@@ -94,9 +103,25 @@ def axis_size(mesh: Mesh, axes: Iterable[str]) -> int:
     return s
 
 
+# (name, shape) pairs whose divisibility fallback already warned once —
+# the fallback is deliberate for a handful of model-zoo dims (e.g. 24
+# heads on a 16-wide model axis) and warning per call would be noise, but
+# *silent* replication hides an N-fold footprint blowup from whoever
+# sized the mesh.
+_replication_warned: set[tuple] = set()
+
+
 def spec(mesh: Mesh, names: tuple[str | None, ...],
-         shape: tuple[int, ...] | None = None) -> P:
-    """PartitionSpec from logical dim names, with divisibility fallback."""
+         shape: tuple[int, ...] | None = None, *,
+         strict: bool = False) -> P:
+    """PartitionSpec from logical dim names, with divisibility fallback.
+
+    A dimension whose size does not divide its mesh axes is replicated,
+    with a once-per-(name, shape) ``UserWarning`` naming the footprint
+    cost.  ``strict=True`` turns the fallback into a ``ValueError`` — the
+    contract the group-sharding layer requests, where replicating the
+    point rows would multiply the paging budget by the mesh size.
+    """
     rules = current_rules()
     parts = []
     for i, name in enumerate(names):
@@ -107,6 +132,25 @@ def spec(mesh: Mesh, names: tuple[str | None, ...],
         if shape is not None:
             size = axis_size(mesh, axes)
             if shape[i] % size != 0:
+                if strict:
+                    raise ValueError(
+                        f"dim {i} ({name!r}) of shape {tuple(shape)} does "
+                        f"not divide mesh axes {axes} (size {size}); "
+                        f"strict sharding refuses to replicate — pad the "
+                        f"dimension to a multiple of {size}"
+                    )
+                key = (name, tuple(shape))
+                if key not in _replication_warned:
+                    _replication_warned.add(key)
+                    warnings.warn(
+                        f"replicating dim {i} ({name!r}) of shape "
+                        f"{tuple(shape)}: size {shape[i]} does not divide "
+                        f"mesh axes {axes} (size {size}) — every device "
+                        f"holds a full copy ({size}x the sharded "
+                        f"footprint)",
+                        UserWarning,
+                        stacklevel=2,
+                    )
                 # replicate instead of uneven-sharding stacked/scanned dims
                 parts.append(None)
                 continue
@@ -114,8 +158,10 @@ def spec(mesh: Mesh, names: tuple[str | None, ...],
     return P(*parts)
 
 
-def named_sharding(mesh: Mesh, names, shape=None) -> NamedSharding:
-    return NamedSharding(mesh, spec(mesh, tuple(names), shape))
+def named_sharding(mesh: Mesh, names, shape=None, *,
+                   strict: bool = False) -> NamedSharding:
+    return NamedSharding(mesh, spec(mesh, tuple(names), shape,
+                                    strict=strict))
 
 
 def shard(x, mesh: Mesh | None, *names):

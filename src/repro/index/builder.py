@@ -190,12 +190,14 @@ def pad_cols(x: np.ndarray, beta: int) -> np.ndarray:
 def build_group_state(
     mesh: Mesh,
     cfg: IndexConfig,
-    points: np.ndarray,
+    points: np.ndarray | None,
     gplan: GroupServingPlan,
     *,
     extra_points: np.ndarray | None = None,
     extra_codes: np.ndarray | None = None,
     base_rows: np.ndarray | None = None,
+    points_loader=None,
+    n_points: int | None = None,
 ) -> QueryState:
     """Materialize one table group's QueryState from its serving plan.
 
@@ -221,7 +223,32 @@ def build_group_state(
       that order) before the extra rows are appended — the tombstone-purge
       rebuild path: purged rows simply never enter the state, and the
       plan's host codes are row-sliced to match.  None keeps every row.
+    * ``points_loader`` + ``n_points`` replace ``points`` (pass None)
+      with per-host row ranges: ``points_loader(lo, hi)`` yields just the
+      rows one shard needs, so a huge corpus never materializes on one
+      host (``distributed.group_sharding.build_group_state_per_host``).
+      Bit-exact with the materialized path at the same capacity; the
+      streaming kwargs don't combine with it (delta compaction rebuilds
+      from the materialized corpus).
     """
+    if points_loader is not None:
+        if points is not None:
+            raise ValueError(
+                "pass either points or points_loader, not both"
+            )
+        if n_points is None:
+            raise ValueError("points_loader requires n_points")
+        if (extra_points is not None or extra_codes is not None
+                or base_rows is not None):
+            raise ValueError(
+                "points_loader does not combine with the streaming "
+                "kwargs (extra_points/extra_codes/base_rows)"
+            )
+        from ..distributed.group_sharding import build_group_state_per_host
+
+        return build_group_state_per_host(
+            mesh, cfg, gplan, points_loader, n_points
+        )
     folded = gplan.folded()
     proj = pad_cols(folded["proj"], cfg.beta)
     b_int = pad_cols(folded["b_int"], cfg.beta)

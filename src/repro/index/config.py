@@ -92,6 +92,12 @@ class IndexConfig:
     analysis_unroll: bool = False  # unroll block/level loops so the dry-run
     # cost analysis counts true work (XLA counts loop bodies once); used by
     # launch/dryrun.py shallow analysis lowerings only
+    n_shards: int = 1  # devices the row capacity is sharded across (the
+    # serving mesh size; distributed.group_sharding).  Compile-relevant:
+    # the per-shard row slice n/n_shards is the lowered scan extent, so
+    # two groups served at different shard counts must not share a step
+    shard_axis: str = "data"  # mesh axis name carrying the shards (the
+    # trailing "model" axis stays size 1 in serving meshes)
 
     @property
     def gamma(self) -> float:
@@ -122,11 +128,17 @@ class IndexConfig:
         ``StateCache`` can budget residency before a group is ever built.
         Uses the *padded* beta/n_levels/row-capacity shapes (what is
         actually materialized), not the group's raw table or row count.
+
+        With ``n_shards > 1`` this prices the **per-device slice**: row
+        arrays shard over the mesh (``n / n_shards`` rows per device,
+        strict — never replicated) while the family stays replicated, so
+        paging budgets describe what one device actually holds.
         """
         vec_itemsize = _dtype_itemsize(self.vec_dtype)
         per_point = self.beta * 4 + self.d * vec_itemsize
         family = self.d * self.beta * 4 + self.beta * (4 + 4) + 4
-        return self.n * per_point + family + 4  # + n_valid scalar
+        rows_per_shard = -(-self.n // max(self.n_shards, 1))
+        return rows_per_shard * per_point + family + 4  # + n_valid scalar
 
     def shape_signature(self) -> tuple:
         """Everything that determines the compiled query step.
@@ -138,6 +150,7 @@ class IndexConfig:
             self.n, self.d, self.beta, self.q_batch, self.k, self.c,
             self.n_levels, self.p, self.block_n, self.budget,
             self.vec_dtype, self.use_pallas, self.analysis_unroll,
+            self.n_shards, self.shard_axis,
         )
 
     @property

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..distributed import group_sharding
 from ..distributed.sharding import shard_map_nocheck
 from ..kernels import ops, ref
 from ..kernels import platform as kplatform
@@ -161,12 +162,7 @@ def _query_shard(
     # Global row offsets per block: streaming states reserve row capacity
     # above the live count, and rows >= n_valid must vanish from both
     # passes (their first-frequent level is forced past every stop level).
-    shard_off = jnp.int32(0)
-    mul = 1
-    for ax, size in reversed(tuple(zip(mesh_axes, axis_sizes))):
-        shard_off = shard_off + jax.lax.axis_index(ax) * mul
-        mul *= size
-    shard_off = shard_off * n_loc
+    shard_off = group_sharding.shard_row_offset(mesh_axes, axis_sizes, n_loc)
     boffs = shard_off + jnp.arange(n_blocks, dtype=jnp.int32) * block
     n_valid = state.n_valid.astype(jnp.int32)
 
@@ -219,8 +215,8 @@ def _query_shard(
         pass1, (hist0, hist0), (codes_blocks, point_blocks, boffs),
         unroll=n_blocks if cfg.analysis_unroll else 1,
     )
-    hist_f = jax.lax.psum(hist_f, mesh_axes)
-    hist_g = jax.lax.psum(hist_g, mesh_axes)
+    hist_f, hist_g = group_sharding.merge_histograms(hist_f, hist_g,
+                                                     mesh_axes)
     nf_cum = jnp.cumsum(hist_f[:, : L + 1], axis=1)
     ng_cum = jnp.cumsum(hist_g[:, : L + 1], axis=1)
     # Stop conditions evaluated only up to each query's own level cap: the
@@ -290,18 +286,12 @@ def _query_shard(
     idx = jnp.take_along_axis(idx, rpos, axis=1)
 
     # ---- global top-k merge ------------------------------------------------
-    gv = jax.lax.all_gather(vals, mesh_axes, tiled=False)  # (S, q_loc, k)
-    gi = jax.lax.all_gather(idx, mesh_axes, tiled=False)
-    S = gv.shape[0]
-    gv = jnp.moveaxis(gv, 0, 1).reshape(q_loc, S * k)
-    gi = jnp.moveaxis(gi, 0, 1).reshape(q_loc, S * k)
-    fvals, fpos = jax.lax.top_k(-gv, k)
-    fidx = jnp.take_along_axis(gi, fpos, axis=1)
+    fvals, fidx = group_sharding.merge_shard_topk(vals, idx, mesh_axes, k)
     n_checked = jnp.minimum(
         jnp.take_along_axis(nf_cum, stop[:, None], axis=1)[:, 0],
         jnp.int32(cfg.budget),
     )
-    return -fvals, fidx, stop, n_checked
+    return fvals, fidx, stop, n_checked
 
 
 def encode_queries(state: QueryState, queries) -> jax.Array:
@@ -329,6 +319,10 @@ def make_query_step(mesh: Mesh, cfg: IndexConfig):
     (dists (Q,k), ids (Q,k), stop (Q,), n_checked (Q,))."""
     pa = _point_axes(mesh)
     sh = shardings(mesh)
+    # Strict row placement (distributed.group_sharding): a capacity that
+    # does not divide the mesh raises here instead of silently replicating
+    # the state onto every device.
+    state_sh = group_sharding.state_shardings(mesh, cfg)
 
     fn = functools.partial(
         _query_shard, cfg=cfg, mesh_axes=pa,
@@ -360,7 +354,7 @@ def make_query_step(mesh: Mesh, cfg: IndexConfig):
     return jax.jit(
         smapped,
         in_shardings=(
-            sh["state"],
+            state_sh,
             sh["queries"],
             sh["queries"],
             sh["queries"],

@@ -39,6 +39,7 @@ class DeltaSegment:
         self.d = int(d)
         self._ids: list[int] = []
         self._vecs: list[np.ndarray] = []
+        self._stacked: np.ndarray | None = None  # cached ``vectors`` view
 
     def __len__(self) -> int:
         """Number of unsealed rows currently buffered."""
@@ -53,6 +54,7 @@ class DeltaSegment:
             )
         self._ids.append(int(point_id))
         self._vecs.append(vector)
+        self._stacked = None  # invalidate the cached stack
 
     @property
     def ids(self) -> np.ndarray:
@@ -61,15 +63,29 @@ class DeltaSegment:
 
     @property
     def vectors(self) -> np.ndarray:
-        """(m, d) float32 buffered rows, in insertion order."""
-        if not self._vecs:
-            return np.empty((0, self.d), np.float32)
-        return np.stack(self._vecs).astype(np.float32)
+        """(m, d) float32 buffered rows, in insertion order.
+
+        The stacked array is cached between writes: every query routed to
+        a group scans its pending rows, so re-stacking per read would put
+        an O(m*d) host copy on the query hot path.  The cache is
+        invalidated by ``append``/``drain`` and returned read-only (it is
+        shared across reads — callers copy before mutating, which the
+        exact-scan path never does).
+        """
+        if self._stacked is None:
+            if self._vecs:
+                stacked = np.stack(self._vecs).astype(np.float32)
+            else:
+                stacked = np.empty((0, self.d), np.float32)
+            stacked.flags.writeable = False
+            self._stacked = stacked
+        return self._stacked
 
     def drain(self) -> tuple[np.ndarray, np.ndarray]:
         """Freeze and clear the memtable, returning ``(ids, vectors)``."""
         ids, vecs = self.ids, self.vectors
         self._ids, self._vecs = [], []
+        self._stacked = None
         return ids, vecs
 
 
@@ -135,7 +151,15 @@ def scan_topk(
     Missing slots (fewer than ``k`` delta rows) hold id -1 / distance
     +inf, the same conventions the engine uses, so the batching layer's
     merge treats delta hits and indexed hits uniformly.  Ties sort by
-    insertion order (stable argsort over rows stored in id order).
+    insertion order.
+
+    Selection runs in O(m) per query via ``np.argpartition`` on a
+    composite ``(distance bits, row index)`` key — bit-identical to a
+    full stable argsort of the distance matrix (the distances are
+    non-negative float32, so their bit patterns order like the values,
+    and the packed row index breaks ties by insertion order exactly as
+    a stable sort would), without the O(m log m) sort over rows that
+    can never reach the top-k.
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     nq = len(queries)
@@ -146,7 +170,15 @@ def scan_topk(
         return out_ids, out_d
     dists = exact_weighted_lp(queries, vectors, q_weights, p)
     take = min(k, m)
-    order = np.argsort(dists, axis=1, kind="stable")[:, :take]
+    # + 0.0 normalizes any -0.0 so the uint32 bit pattern is monotone
+    keys = (dists + np.float32(0.0)).view(np.uint32).astype(np.int64)
+    keys = (keys << np.int64(32)) | np.arange(m, dtype=np.int64)[None, :]
+    if take < m:
+        part = np.argpartition(keys, take - 1, axis=1)[:, :take]
+        sel = np.take_along_axis(keys, part, axis=1)
+        order = np.take_along_axis(part, np.argsort(sel, axis=1), axis=1)
+    else:
+        order = np.argsort(keys, axis=1)
     out_ids[:, :take] = np.asarray(ids, np.int64)[order]
     out_d[:, :take] = np.take_along_axis(dists, order, axis=1)
     return out_ids, out_d

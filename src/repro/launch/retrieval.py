@@ -13,7 +13,10 @@ Steps:
               whose padded shapes coincide share one compiled query step.
               ``--max-resident-groups`` / ``--device-budget`` page the
               states through a budgeted LRU cache (host offload/restore)
-              instead of keeping every group resident
+              instead of keeping every group resident;
+              ``--shards`` shards every state's rows across that many
+              devices (per-shard scan passes + exact collective merge,
+              bit-identical answers at any shard count)
   3. serve  — sync (default): the mixed (query, weight_id) stream arrives
               in one call and is routed, coalesced, padded and answered in
               submission order (Algorithm 2).
@@ -189,7 +192,8 @@ def run(args) -> dict:
                          device_budget_bytes=args.device_budget,
                          delta_seal_rows=args.delta_seal_rows,
                          delta_reserve_rows=reserve,
-                         use_pallas=args.use_pallas)
+                         use_pallas=args.use_pallas,
+                         n_shards=args.shards)
     svc = RetrievalService(plan, data, cfg=scfg)
     svc.warmup()
     t_build = time.time() - t0
@@ -200,6 +204,11 @@ def run(args) -> dict:
           f"{svc.step_cache.n_compiled} compiled steps "
           f"(shape sharing {plan.n_groups}/{svc.step_cache.n_compiled}) "
           f"in {t_build:.1f}s")
+    if args.shards > 1:
+        n_loc = svc.batcher.row_capacity() // svc.mesh.size
+        print(f"sharding: {svc.mesh.size} shards over mesh "
+              f"{dict(svc.mesh.shape)} ({n_loc} rows/shard, "
+              f"collective-merged top-k)")
     print(f"kernels: {kernel_platform.describe(scfg.use_pallas)} "
           f"(--use-pallas {args.use_pallas})")
     svc.reset_stats()  # serve-phase cache counters exclude warmup churn
@@ -450,6 +459,13 @@ def parse_args(argv=None):
                     help="row capacity reserved per group state for "
                          "compacted inserts (default: --n-queries when "
                          "--insert-rate > 0, else 0)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard every group state's rows across this many "
+                         "devices (per-shard scan passes, exact collective "
+                         "merge — answers are bit-identical at any shard "
+                         "count); on CPU force a multi-device platform "
+                         "with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--max-resident-groups", type=int, default=None,
                     help="page group states: keep at most this many device-"
                          "resident (LRU eviction + host offload/restore)")

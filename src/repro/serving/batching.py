@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.serving_plan import ServingPlan
+from ..distributed import group_sharding
 from ..index.builder import (
     build_group_state,
     offload_state,
@@ -94,6 +95,11 @@ class ServiceConfig:
     # compact() calls / the async frontend's idle poll)
     max_pending: int | None = None  # async backpressure: cap per-group
     # pending buffers; submit raises Overloaded instead of growing unbounded
+    n_shards: int = 1  # shard every group's state rows across this many
+    # devices on the serving mesh's "data" axis
+    # (distributed.group_sharding.serving_mesh); per-shard passes merge
+    # with exact collectives, so answers are bit-identical at any shard
+    # count.  Ignored when an explicit mesh is passed to the Batcher
 
     def __post_init__(self):
         # normalize the CLI spellings onto the IndexConfig values (frozen
@@ -170,6 +176,8 @@ class ServiceConfig:
             raise ValueError(
                 f"max_pending must be >= 1 or None, got {self.max_pending}"
             )
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
         try:
             jnp.dtype(self.vec_dtype)
         except TypeError:
@@ -366,23 +374,35 @@ class Batcher:
             )
         self.plan = plan
         self.points = points
-        self.mesh = mesh if mesh is not None else jax.make_mesh(
-            (1, 1), ("data", "model")
+        # cfg.n_shards sizes the serving mesh (group states shard their
+        # rows across it); an explicit mesh wins, e.g. a training mesh
+        # reused for serving
+        self.mesh = mesh if mesh is not None else (
+            group_sharding.serving_mesh(cfg.n_shards)
         )
         self.cfg = cfg
         self.step_cache = QueryStepCache()
         self._group_cfgs: dict[int, IndexConfig] = {}
         self._delta = None  # lazy DeltaIndex, created on first write
+        # Paging moves sharded states per shard (each chunk device_put
+        # straight to its device, no all-rows host concatenation); the
+        # single-device variants keep the seed behavior on a 1-chip mesh.
+        if self.mesh.size > 1:
+            offload = group_sharding.offload_state_sharded
+            restore = (
+                lambda gi, host:
+                group_sharding.restore_state_sharded(self.mesh, host)
+            )
+        else:
+            offload = offload_state
+            restore = lambda gi, host: restore_state(self.mesh, host)
         self.state_cache = StateCache(
             build=self._build_state,
             nbytes_of=lambda gi: self.group_config(gi).state_nbytes,
             max_resident_groups=cfg.max_resident_groups,
             device_budget_bytes=cfg.device_budget_bytes,
-            offload=offload_state if cfg.offload_evicted else None,
-            restore=(
-                (lambda gi, host: restore_state(self.mesh, host))
-                if cfg.offload_evicted else None
-            ),
+            offload=offload if cfg.offload_evicted else None,
+            restore=restore if cfg.offload_evicted else None,
             on_event=self._on_cache_event,
         )
         self.stats: dict[int, GroupServeStats] = {
@@ -431,6 +451,8 @@ class Batcher:
                 vec_dtype=self.cfg.vec_dtype,
                 use_pallas=self.cfg.use_pallas,
                 delta_seal_rows=self.cfg.delta_seal_rows,
+                n_shards=self.mesh.size,
+                shard_axis=self.mesh.axis_names[0],
             )
             self._group_cfgs[gi] = cfg
         return cfg

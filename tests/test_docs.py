@@ -41,6 +41,7 @@ DOCSTRING_SCOPE = [
     "src/repro/serving/decode.py",
     "src/repro/core/serving_plan.py",
     "src/repro/index/streaming.py",
+    "src/repro/distributed/group_sharding.py",
 ]
 
 # quickstart smoke: same flags as documented, shrunk to a tiny corpus
@@ -53,6 +54,9 @@ TINY_OVERRIDES = {
     "--k": "3",
     "--v": "4",
     "--q-batch": "4",
+    # the documented sharded invocation forces an 8-device mesh via
+    # XLA_FLAGS; the in-process smoke keeps the single real device
+    "--shards": "1",
 }
 _STORE_TRUE = {"--check", "--async", "--no-pallas", "--driver",
                "--prefetch"}
@@ -168,7 +172,10 @@ def test_docs_cross_links():
                    "DeltaIndex", "delta_seal_rows", "append_to_state",
                    "n_valid", "ServiceDriver", "DeadlinePrefetch",
                    "CostAwareEviction", "scheduler.py", "prefetch",
-                   "purge=True"):
+                   "purge=True", "group_sharding.py", "serving_mesh",
+                   "state_shardings", "strict=True",
+                   "build_group_state_per_host",
+                   "offload_state_sharded", "n_shards"):
         assert anchor in arch, f"ARCHITECTURE.md lost its {anchor} coverage"
 
 

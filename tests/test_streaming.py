@@ -661,6 +661,78 @@ def test_compaction_advances_the_served_plan(setup):
     assert pid == plan.n + 8
 
 
+# ------------------------------------------------- hot-path micro-structure
+
+
+def test_memtable_vectors_cached_no_recopy():
+    """The stacked delta matrix is built once per write epoch: repeated
+    reads return the *same* array object (no O(m*d) re-stack per scan),
+    writes invalidate, and the shared array is read-only."""
+    from repro.index.streaming import DeltaSegment
+
+    seg = DeltaSegment(4)
+    empty = seg.vectors
+    assert empty.shape == (0, 4) and seg.vectors is empty
+    seg.append(10, np.arange(4, dtype=np.float32))
+    seg.append(11, np.arange(4, dtype=np.float32) + 1)
+    v1 = seg.vectors
+    assert v1 is seg.vectors  # identity: no copy on the read path
+    assert not v1.flags.writeable  # shared across reads, so frozen
+    np.testing.assert_array_equal(v1[1], np.arange(4, dtype=np.float32) + 1)
+    seg.append(12, np.arange(4, dtype=np.float32) + 2)
+    v2 = seg.vectors
+    assert v2 is not v1 and v2.shape == (3, 4)  # append invalidates
+    ids, vecs = seg.drain()
+    assert vecs is v2 and ids.tolist() == [10, 11, 12]
+    assert seg.vectors is not v2 and seg.vectors.shape == (0, 4)
+
+
+def _scan_topk_reference(queries, q_weights, ids, vectors, p, k):
+    """The pre-optimization scan_topk: full (Q, m) stable argsort."""
+    from repro.index.streaming import exact_weighted_lp
+
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    nq = len(queries)
+    out_ids = np.full((nq, k), -1, np.int64)
+    out_d = np.full((nq, k), np.inf, np.float32)
+    m = len(ids)
+    if m == 0:
+        return out_ids, out_d
+    dists = exact_weighted_lp(queries, vectors, q_weights, p)
+    take = min(k, m)
+    order = np.argsort(dists, axis=1, kind="stable")[:, :take]
+    out_ids[:, :take] = np.asarray(ids, np.int64)[order]
+    out_d[:, :take] = np.take_along_axis(dists, order, axis=1)
+    return out_ids, out_d
+
+
+@pytest.mark.parametrize("p", [2.0, 1.0, 0.5])
+@pytest.mark.parametrize("m,k", [(0, 5), (3, 5), (64, 5), (64, 64), (7, 7)])
+def test_scan_topk_bit_identical_to_stable_argsort(p, m, k):
+    """The argpartition fast path returns bit-identical ids *and* dists
+    to the full stable argsort it replaced — including insertion-order
+    tie-breaks from duplicated rows (equal distances under every query)."""
+    from repro.index.streaming import scan_topk
+
+    rng = np.random.default_rng(97)
+    d = 6
+    vecs = rng.normal(0, 5, (max(m, 1), d)).astype(np.float32)[:m]
+    if m >= 8:
+        vecs[5] = vecs[1]  # exact duplicates: distance ties every query
+        vecs[7] = vecs[1]
+        vecs[6] = vecs[2]
+    ids = rng.permutation(10 * max(m, 1))[:m].astype(np.int64)
+    q = rng.normal(0, 5, (4, d)).astype(np.float32)
+    q[2] = vecs[0] if m else 0.0  # a zero-distance hit
+    w = rng.uniform(0.25, 2.0, (4, d)).astype(np.float32)
+    got_i, got_d = scan_topk(q, w, ids, vecs, p, k)
+    want_i, want_d = _scan_topk_reference(q, w, ids, vecs, p, k)
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(
+        got_d.view(np.uint32), want_d.view(np.uint32)
+    )
+
+
 # ------------------------------------------------------- merge_topk helper
 
 
