@@ -205,20 +205,40 @@ class WLSHIndex:
         mu_i = int(self._effective_mus(plan)[slot])
         return built, slot, beta_i, mu_i
 
+    @staticmethod
+    def _c_eff(cfg_c: float, c: float | None) -> int:
+        """Resolve an optional approximation-ratio override to int >= 2.
+
+        Query-time ``c`` relaxation is the degradation ladder's oracle
+        knob: the hash tables are c-independent (virtual rehashing only
+        regroups buckets as ``code // c**j``), so a built index can be
+        queried at any integer ratio >= the configured one without
+        rebuilding — exactly what the serving ladder does via
+        pre-compiled relaxed steps.
+        """
+        c_eff = cfg_c if c is None else c
+        if c_eff != int(round(c_eff)) or int(round(c_eff)) < 2:
+            raise ValueError(
+                f"approximation ratio c must be an integer >= 2, got {c_eff}"
+            )
+        return int(round(c_eff))
+
     def search(
-        self, q: np.ndarray, weight_id: int, k: int = 1
+        self, q: np.ndarray, weight_id: int, k: int = 1,
+        c: float | None = None,
     ) -> SearchResult:
         """(c, k)-WNN search under weight vector ``weight_id`` (Algorithm 2).
 
         Faithful C2LSH level loop with incremental collision counting over
-        the group's first beta_{W_i} tables.
+        the group's first beta_{W_i} tables.  ``c`` optionally overrides
+        the configured approximation ratio at query time (see ``_c_eff``).
         """
         built, slot, beta_i, mu_i = self._member_params(weight_id)
         plan = built.plan
         w_i = self.weights[weight_id]
         r_min = float(plan.r_min_members[slot])
         n_levels = int(plan.n_levels[slot])
-        c = int(round(self.cfg.c))
+        c = self._c_eff(self.cfg.c, c)
         n = self.n
         budget = k + int(math.ceil(self.cfg.gamma_n))  # == gamma * n, float-exact
 
@@ -280,7 +300,7 @@ class WLSHIndex:
             R = r_min * (c**j)
             if cand_dists:
                 all_d = np.concatenate(cand_dists)
-                n_good = int(np.sum(all_d <= self.cfg.c * R))
+                n_good = int(np.sum(all_d <= c * R))
             if n_good >= k or n_checked >= budget:
                 stop_level = j
                 found_k = n_good >= k
@@ -314,21 +334,23 @@ class WLSHIndex:
     # ------------------------------------------------------------ dense oracle
 
     def search_dense(
-        self, q: np.ndarray, weight_id: int, k: int = 1
+        self, q: np.ndarray, weight_id: int, k: int = 1,
+        c: float | None = None,
     ) -> SearchResult:
         """Single-pass dense search (the TPU formulation, numpy oracle).
 
         Computes jmin per (point, table), takes the mu-th order statistic to
         get L_freq, then applies the paper's stop conditions level-by-level
         analytically.  Must agree with ``search`` on the candidate *sets*;
-        used to validate kernels and the sharded engine.
+        used to validate kernels and the sharded engine.  ``c`` optionally
+        overrides the configured approximation ratio (see ``_c_eff``).
         """
         built, slot, beta_i, mu_i = self._member_params(weight_id)
         plan = built.plan
         w_i = self.weights[weight_id]
         r_min = float(plan.r_min_members[slot])
         n_levels = int(plan.n_levels[slot])
-        c = int(round(self.cfg.c))
+        c = self._c_eff(self.cfg.c, c)
         n = self.n
         budget = k + int(math.ceil(self.cfg.gamma_n))  # == gamma * n, float-exact
 
@@ -356,7 +378,7 @@ class WLSHIndex:
             n_freq = int(np.sum(freq))
             n_chk = min(n_freq, budget)
             R = r_min * (c**j)
-            n_good = int(np.sum(freq & (dists <= self.cfg.c * R)))
+            n_good = int(np.sum(freq & (dists <= c * R)))
             if n_good >= k or n_chk >= budget:
                 stop_level, n_checked, found_k = j, n_chk, n_good >= k
                 break

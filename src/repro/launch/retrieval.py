@@ -67,6 +67,7 @@ from ..serving.async_service import (
     ManualClock,
     replay_open_loop,
 )
+from ..serving.qos import DegradeStep, QosClass, QosScheduler
 from ..serving.retrieval import RetrievalService, ServiceConfig
 from ..serving.scheduler import (
     DeadlinePrefetch,
@@ -74,7 +75,7 @@ from ..serving.scheduler import (
     replay_with_driver,
 )
 
-__all__ = ["parse_bytes", "run", "main"]
+__all__ = ["parse_bytes", "parse_ladder", "parse_tenants", "run", "main"]
 
 _UNITS = {"": 1, "B": 1, "KB": 1 << 10, "MB": 1 << 20, "GB": 1 << 30,
           "TB": 1 << 40,
@@ -119,6 +120,83 @@ def parse_bytes(text: str) -> int:
             f"byte size {text!r} is under 1 byte"
         )
     return nbytes
+
+
+def parse_tenants(text: str) -> list[QosClass]:
+    """Parse a ``--tenants`` spec into ``QosClass``es.
+
+    Spec: ``;``-separated tenants, each ``name:key=val,key=val,...``
+    with keys ``weight``, ``rate``, ``burst``, ``slo_ms`` (floats) and
+    ``degradable`` (bare flag or ``=true``/``=false``), e.g.::
+
+        gold:weight=4,slo_ms=20;bronze:slo_ms=100,degradable
+    """
+    classes: list[QosClass] = []
+    for part in filter(None, (s.strip() for s in text.split(";"))):
+        name, _, body = part.partition(":")
+        kwargs: dict = {}
+        for item in filter(None, (s.strip() for s in body.split(","))):
+            key, eq, val = item.partition("=")
+            key = key.strip()
+            if key == "degradable":
+                kwargs[key] = (not eq) or val.strip().lower() in (
+                    "1", "true", "yes"
+                )
+            elif key in ("weight", "rate", "burst", "slo_ms"):
+                kwargs[key] = float(val)
+            else:
+                raise argparse.ArgumentTypeError(
+                    f"unknown tenant key {key!r} in {part!r} (use weight, "
+                    f"rate, burst, slo_ms, degradable)"
+                )
+        classes.append(QosClass(name.strip(), **kwargs))
+    if not classes:
+        raise argparse.ArgumentTypeError(f"empty --tenants spec {text!r}")
+    return classes
+
+
+def parse_ladder(text: str) -> tuple[DegradeStep, ...]:
+    """Parse a ``--degrade-ladder`` spec into ``DegradeStep``s.
+
+    Spec: ``,``-separated rungs, each ``c:k`` or ``c:k:cost``, strictest
+    first, e.g. ``4:3:0.5,5:2:0.25``.
+    """
+    steps = []
+    for part in filter(None, (s.strip() for s in text.split(","))):
+        bits = part.split(":")
+        if len(bits) not in (2, 3):
+            raise argparse.ArgumentTypeError(
+                f"can't parse ladder rung {part!r} (use c:k or c:k:cost)"
+            )
+        steps.append(DegradeStep(
+            c=int(bits[0]), k=int(bits[1]),
+            cost=float(bits[2]) if len(bits) == 3 else 1.0,
+        ))
+    if not steps:
+        raise argparse.ArgumentTypeError(f"empty --degrade-ladder {text!r}")
+    return tuple(steps)
+
+
+def _make_qos(args, ladder) -> QosScheduler:
+    """A QosScheduler over the CLI tenant classes and ladder."""
+    return QosScheduler(
+        classes=args.tenants,
+        ladder=ladder,
+        capacity_per_tick=args.qos_capacity,
+    )
+
+
+def _print_qos_report(qos: QosScheduler) -> None:
+    """Per-tenant QoS report: admission, SLO misses, degradation."""
+    s = qos.summary()
+    print(f"qos: {s['n_degrade_steps']} degrade / "
+          f"{s['n_restore_steps']} restore ladder steps")
+    for name, t in sorted(s["tenants"].items()):
+        miss = (f"{t['slo_miss_rate']:.2f}" if t["n_resolved"] else "n/a")
+        print(f"  tenant {name}: {t['n_admitted']} admitted "
+              f"({t['n_rate_limited']} rate-limited), slo-miss {miss}, "
+              f"mean wait {1e3 * t['mean_wait_s']:.2f} ms, "
+              f"{t['n_degraded']} degraded answers (rung {t['rung']})")
 
 
 def _make_driver(args, asvc) -> ServiceDriver | None:
@@ -186,6 +264,7 @@ def run(args) -> dict:
     reserve = args.delta_reserve_rows
     if reserve is None:  # headroom for every op turning out to be an insert
         reserve = args.n_queries if args.insert_rate > 0 else 0
+    ladder = args.degrade_ladder if args.qos else ()
     scfg = ServiceConfig(k=args.k, q_batch=args.q_batch,
                          max_delay_ms=args.max_delay_ms,
                          max_resident_groups=args.max_resident_groups,
@@ -193,7 +272,8 @@ def run(args) -> dict:
                          delta_seal_rows=args.delta_seal_rows,
                          delta_reserve_rows=reserve,
                          use_pallas=args.use_pallas,
-                         n_shards=args.shards)
+                         n_shards=args.shards,
+                         degrade_ladder=ladder)
     svc = RetrievalService(plan, data, cfg=scfg)
     svc.warmup()
     t_build = time.time() - t0
@@ -227,13 +307,20 @@ def run(args) -> dict:
         arrivals = np.cumsum(
             rng.exponential(1.0 / args.arrival_rate, args.n_queries)
         )
-        asvc = AsyncRetrievalService(svc, clock=ManualClock())
+        qos = _make_qos(args, ladder) if args.qos else None
+        tenants = None
+        if qos is not None:
+            names = [c.name for c in args.tenants]
+            tenants = [str(t) for t in rng.choice(names, args.n_queries)]
+        asvc = AsyncRetrievalService(svc, clock=ManualClock(), qos=qos)
         driver = _make_driver(args, asvc)
         t0 = time.time()
         if driver is not None:
-            res, waits = replay_with_driver(driver, qpts, wids, arrivals)
+            res, waits = replay_with_driver(driver, qpts, wids, arrivals,
+                                            tenants=tenants)
         else:
-            res, waits = replay_open_loop(asvc, qpts, wids, arrivals)
+            res, waits = replay_open_loop(asvc, qpts, wids, arrivals,
+                                          tenants=tenants)
         t_serve = time.time() - t0
         wait_ms = 1e3 * waits if len(waits) else np.array([np.nan])
         async_report = {
@@ -244,6 +331,7 @@ def run(args) -> dict:
             "n_launched_full": asvc.n_launched_full,
             "n_launched_deadline": asvc.n_launched_deadline,
             "driver": driver.stats.summary() if driver is not None else None,
+            "qos": qos.summary() if qos is not None else None,
         }
         print(f"serve[async]: {args.n_queries} queries at "
               f"{args.arrival_rate:.0f} q/s open-loop, deadline "
@@ -255,6 +343,8 @@ def run(args) -> dict:
               f"({args.n_queries / t_serve:.1f} q/s compute)")
         if driver is not None:
             _print_driver_report(driver)
+        if qos is not None:
+            _print_qos_report(qos)
     else:
         t0 = time.time()
         res = svc.query(qpts, wids)
@@ -441,6 +531,26 @@ def parse_args(argv=None):
                     help="with --driver: predictively prefetch group "
                          "states from the pending-deadline schedule so "
                          "restores overlap launches")
+    ap.add_argument("--qos", action="store_true",
+                    help="multi-tenant QoS for the --async replay: each "
+                         "request is tagged with a --tenants class, "
+                         "admission-controlled, dequeued weighted-fair, "
+                         "and degradable tenants step down the "
+                         "--degrade-ladder under sustained overload")
+    ap.add_argument("--tenants", type=parse_tenants,
+                    default="gold:weight=4,slo_ms=20;"
+                            "bronze:slo_ms=100,degradable",
+                    help="tenant classes for --qos: ';'-separated "
+                         "name:key=val,... specs (keys: weight, rate, "
+                         "burst, slo_ms, degradable)")
+    ap.add_argument("--degrade-ladder", type=parse_ladder,
+                    default="4:3:0.5",
+                    help="with --qos: pre-planned (c, k) relaxation "
+                         "rungs, strictest first, as c:k[:cost] entries "
+                         "joined by ','")
+    ap.add_argument("--qos-capacity", type=float, default=1.0,
+                    help="with --qos: launch-cost budget per scheduler "
+                         "tick for the weighted-fair dequeue")
     ap.add_argument("--max-delay-ms", type=float, default=2.0,
                     help="async deadline budget: a partial batch launches "
                          "once its oldest request has waited this long")
@@ -497,6 +607,14 @@ def parse_args(argv=None):
         ap.error("--driver drives the async frontend; add --async")
     if args.prefetch and not args.driver:
         ap.error("--prefetch is a ServiceDriver feature; add --driver")
+    if args.qos and not args.use_async:
+        ap.error("--qos shapes the async frontend's traffic; add --async")
+    if args.qos and args.insert_rate > 0:
+        ap.error("--qos is not wired into the mixed read/write replay; "
+                 "drop --insert-rate")
+    if args.qos and args.check:
+        ap.error("--check validates strict answers; a degraded QoS tenant "
+                 "may legitimately differ — drop one of the two")
     return args
 
 

@@ -3,8 +3,9 @@
 Sync + async weight-routed frontends over a shared batching core, group
 states paged through a budgeted ``StateCache``, streaming inserts/deletes
 through the ``DeltaIndex`` subsystem, a real-time ``ServiceDriver`` with
-predictive prefetch and cost-aware eviction, plus the LM decode
-loop/samplers.
+predictive prefetch and cost-aware eviction, multi-tenant QoS (admission
+control, weighted-fair dequeue, SLO-aware (c, k) degradation), plus the
+LM decode loop/samplers.
 """
 
 from .async_service import (
@@ -25,6 +26,16 @@ from .batching import (
 )
 from .decode import SamplerConfig, generate, make_serve_step
 from .delta import DeltaIndex, DeltaStats
+from .qos import (
+    DEFAULT_TENANT,
+    DeficitRoundRobin,
+    DegradeStep,
+    QosClass,
+    QosScheduler,
+    RateLimited,
+    TenantStats,
+    TokenBucket,
+)
 from .scheduler import (
     CostAwareEviction,
     DeadlinePrefetch,
@@ -35,7 +46,12 @@ from .scheduler import (
     ServiceDriver,
     replay_with_driver,
 )
-from .state_cache import CacheStats, EvictionCandidate, StateCache
+from .state_cache import (
+    CacheStats,
+    EvictionCandidate,
+    RestoreCostModel,
+    StateCache,
+)
 from .retrieval import (
     GroupServeStats,
     RetrievalResult,
@@ -49,7 +65,10 @@ __all__ = [
     "Batcher",
     "CacheStats",
     "CostAwareEviction",
+    "DEFAULT_TENANT",
     "DeadlinePrefetch",
+    "DeficitRoundRobin",
+    "DegradeStep",
     "DeltaIndex",
     "DeltaStats",
     "DriverStats",
@@ -60,14 +79,20 @@ __all__ = [
     "ManualClock",
     "Overloaded",
     "PrefetchPolicy",
+    "QosClass",
+    "QosScheduler",
     "QueryAnswer",
     "QueryFuture",
+    "RateLimited",
+    "RestoreCostModel",
     "RetrievalResult",
     "RetrievalService",
     "SamplerConfig",
     "ServiceConfig",
     "ServiceDriver",
     "StateCache",
+    "TenantStats",
+    "TokenBucket",
     "coalesce",
     "generate",
     "make_serve_step",

@@ -36,6 +36,7 @@ import time
 import numpy as np
 
 from .batching import Batcher
+from .qos import DEFAULT_TENANT, QosScheduler
 from .retrieval import RetrievalResult, RetrievalService
 
 __all__ = [
@@ -141,6 +142,7 @@ class _Pending:
     deadline: float
     t_submit: float
     future: QueryFuture
+    tenant: str = DEFAULT_TENANT
 
 
 class AsyncRetrievalService:
@@ -169,6 +171,7 @@ class AsyncRetrievalService:
         max_delay_ms: float | None = None,
         clock=time.monotonic,
         compact_on_idle: bool = True,
+        qos: QosScheduler | None = None,
     ):
         self.batcher = (
             service.batcher if isinstance(service, RetrievalService)
@@ -180,6 +183,11 @@ class AsyncRetrievalService:
             raise ValueError(f"max_delay_ms must be >= 0, got {max_delay_ms}")
         self.max_delay_ms = float(max_delay_ms)
         self.clock = clock
+        # multi-tenant QoS: admission control + per-class SLO deadlines
+        # on submit, weighted-fair capacity-bounded dequeue on poll, and
+        # (driver-stepped) (c, k) degradation under sustained overload.
+        # None = single-tenant service, bit-identical to the pre-QoS path
+        self.qos = qos
         # background compaction: an idle poll (nothing expired to launch)
         # absorbs the streaming delta's *sealed* backlog into the main
         # group states, capacity permitting — the single-threaded analog
@@ -189,9 +197,13 @@ class AsyncRetrievalService:
         # work (background compaction) and wants submit wake-ups; None =
         # undriven (poll() keeps compacting on idle ticks itself)
         self.driver = None
-        self._pending: dict[int, collections.deque[_Pending]] = (
-            collections.defaultdict(collections.deque)
-        )
+        # pending buffers keyed (group_id, tenant): one tenant's queries
+        # never share a launch with another's, so a degraded tenant's
+        # relaxed step cannot touch a strict tenant's answers.  The
+        # default tenant keeps the pre-QoS one-buffer-per-group layout
+        self._pending: dict[
+            tuple[int, str], collections.deque[_Pending]
+        ] = collections.defaultdict(collections.deque)
         # launch-cause counters (visible to tests and serve_bench)
         self.n_launched_full = 0
         self.n_launched_deadline = 0
@@ -218,18 +230,49 @@ class AsyncRetrievalService:
         The scheduler's view of the pending schedule: a deadline is a
         launch time, so the prefetch policy reads this to decide which
         group states to bring on device ahead of their launches.
+        Per-tenant buffers aggregate to their group here — prefetch
+        cares which *state* is about to launch, not for whom.
+        """
+        out: dict[int, tuple[int, float]] = {}
+        for (gi, _tenant), q in self._pending.items():
+            if not q:
+                continue
+            oldest = min(r.deadline for r in q)
+            depth, prev = out.get(gi, (0, oldest))
+            out[gi] = (depth + len(q), min(prev, oldest))
+        return out
+
+    def pending_tenant_depths(self) -> dict[tuple[int, str],
+                                            tuple[int, float]]:
+        """Per-``(group, tenant)`` ``(depth, oldest_deadline)`` snapshot.
+
+        The fair queue's view: what ``QosScheduler.plan_launches``
+        orders by deadline and serves by deficit round robin.
         """
         return {
-            gi: (len(q), min(r.deadline for r in q))
-            for gi, q in self._pending.items() if q
+            key: (len(q), min(r.deadline for r in q))
+            for key, q in self._pending.items() if q
         }
 
     # ---------------------------------------------------------------- serving
 
-    def submit(self, query, weight_id, deadline: float | None = None
-               ) -> QueryFuture:
-        """Enqueue one request; launches its group's batch if now full."""
+    def submit(self, query, weight_id, deadline: float | None = None,
+               tenant: str | None = None) -> QueryFuture:
+        """Enqueue one request; launches its group's batch if now full.
+
+        ``tenant`` names the submitting tenant class.  With a
+        ``QosScheduler`` attached, the tenant must be registered
+        (``KeyError`` otherwise), the submit is admission-controlled
+        (typed ``RateLimited`` *before* enqueueing when the class's
+        token bucket is empty), and a missing explicit ``deadline``
+        takes the class's SLO budget instead of ``max_delay_ms``.
+        Backpressure (``Overloaded``) is checked against the group's
+        total pending depth across tenants, before any token is spent —
+        a rejected caller never consumes admission budget.
+        """
         now = self.clock()
+        if tenant is None:
+            tenant = DEFAULT_TENANT
         query = np.asarray(query, np.float32).reshape(-1)
         if query.shape != (self.batcher.plan.d,):
             raise ValueError(
@@ -238,25 +281,41 @@ class AsyncRetrievalService:
             )
         gi = int(self.batcher.route(weight_id)[0])
         max_pending = self.batcher.cfg.max_pending
-        if max_pending is not None and (
-            len(self._pending[gi]) >= max_pending
-        ):
-            # reject before enqueueing: the caller holds no future, the
-            # buffer stays bounded, and poll()/drain() frees capacity
-            raise Overloaded(gi, len(self._pending[gi]), max_pending)
+        if max_pending is not None:
+            depth = sum(
+                len(q) for (g, _t), q in self._pending.items() if g == gi
+            )
+            if depth >= max_pending:
+                # reject before enqueueing: the caller holds no future,
+                # the buffer stays bounded, poll()/drain() frees capacity
+                raise Overloaded(gi, depth, max_pending)
+        if self.qos is not None:
+            # admission last among the reject paths: a raise after the
+            # token was spent would leak admission budget
+            self.qos.admit(tenant, now)
         if deadline is None:
-            deadline = now + self.max_delay_ms / 1e3
+            if self.qos is not None:
+                deadline = self.qos.deadline_for(
+                    tenant, now, self.max_delay_ms / 1e3
+                )
+            else:
+                deadline = now + self.max_delay_ms / 1e3
         elif not np.isfinite(deadline):
             # a NaN/inf deadline would never compare expired in poll() and
             # would poison next_deadline() for every event-loop driver
             raise ValueError(f"deadline must be finite, got {deadline}")
         fut = QueryFuture()
-        pend = _Pending(query, int(weight_id), float(deadline), now, fut)
-        q = self._pending[gi]
+        pend = _Pending(query, int(weight_id), float(deadline), now, fut,
+                        str(tenant))
+        q = self._pending[(gi, str(tenant))]
         q.append(pend)
-        if len(q) >= self.batcher.cfg.q_batch:
+        # with QoS attached, a full buffer launches at the next poll tick
+        # instead of inside submit: *every* launch then flows through the
+        # weighted-fair queue under the capacity, so no tenant can buy
+        # extra capacity by bursting a buffer full
+        if len(q) >= self.batcher.cfg.q_batch and self.qos is None:
             try:
-                self._launch(gi, "full")
+                self._launch((gi, str(tenant)), "full")
             except Exception:
                 # submit is atomic too: the caller never receives ``fut`` on
                 # a raise, so withdraw their request (it is the newest, put
@@ -279,15 +338,44 @@ class AsyncRetrievalService:
         With a ``scheduler.ServiceDriver`` attached, idle-time work is
         the driver's (its ticks call ``idle_work`` themselves), so an
         undriven ``poll`` no longer compacts.
+
+        With a ``QosScheduler`` attached, launchable buffers (oldest
+        deadline expired *or* filled to ``q_batch`` — submit defers full
+        launches to the tick under QoS) instead go through
+        ``QosScheduler.plan_launches``: deadline-ordered, served
+        weighted-fair by deficit round robin under the scheduler's
+        per-tick capacity.  Deferred launchable buffers register
+        overload pressure; a tick with nothing launchable registers a
+        clear tick, so the degradation hysteresis sees both.
         """
         if now is None:
             now = self.clock()
         n = 0
-        for gi in list(self._pending):
-            q = self._pending[gi]
-            if q and min(r.deadline for r in q) <= now:
-                self._launch(gi, "deadline")
-                n += 1
+        if self.qos is None:
+            for key in list(self._pending):
+                q = self._pending[key]
+                if q and min(r.deadline for r in q) <= now:
+                    self._launch(key, "deadline")
+                    n += 1
+        else:
+            qb = self.batcher.cfg.q_batch
+            launchable = [
+                (min(r.deadline for r in q), key[0], key[1])
+                for key, q in self._pending.items()
+                if q and (min(r.deadline for r in q) <= now
+                          or len(q) >= qb)
+            ]
+            if launchable:
+                for gi, tenant in self.qos.plan_launches(launchable, now):
+                    key = (gi, tenant)
+                    cause = (
+                        "full" if len(self._pending[key]) >= qb
+                        else "deadline"
+                    )
+                    self._launch(key, cause)
+                    n += 1
+            else:
+                self.qos.note_idle_tick()
         if n == 0 and self.driver is None:
             self.idle_work()
         return n
@@ -329,21 +417,27 @@ class AsyncRetrievalService:
     def drain(self) -> int:
         """Flush all pending buffers regardless of deadline."""
         n = 0
-        for gi in list(self._pending):
-            while self._pending[gi]:
-                self._launch(gi, "drain")
+        for key in list(self._pending):
+            while self._pending[key]:
+                self._launch(key, "drain")
                 n += 1
         return n
 
-    def _launch(self, gi: int, cause: str) -> None:
-        q = self._pending[gi]
+    def _launch(self, key: tuple[int, str], cause: str) -> None:
+        gi, tenant = key
+        q = self._pending[key]
         qb = self.batcher.cfg.q_batch
         batch = [q.popleft() for _ in range(min(qb, len(q)))]
+        # the tenant's current degradation rung picks which pre-compiled
+        # (c, k) step serves this launch; rung 0 (and qos=None) is the
+        # strict configured parameters
+        rung = self.qos.rung_of(tenant) if self.qos is not None else 0
         try:
             ids, dists, stop, chk = self.batcher.run_batch(
                 gi,
                 np.stack([r.query for r in batch]),
                 np.array([r.weight_id for r in batch], np.int64),
+                rung=rung,
             )
         except Exception:
             # atomic launch: put the batch back (original order, ahead of
@@ -363,10 +457,14 @@ class AsyncRetrievalService:
                 ids=ids[i], dists=dists[i], group_id=gi,
                 stop_level=int(stop[i]), n_checked=int(chk[i]),
             ), now)
+            if self.qos is not None:
+                self.qos.on_resolved(
+                    r.tenant, now - r.t_submit, now > r.deadline, rung
+                )
 
 
 def _replay(svc: AsyncRetrievalService, queries, weight_ids, arrivals,
-            tick, tick_at_arrivals: bool = False):
+            tick, tick_at_arrivals: bool = False, tenants=None):
     """Shared open-loop replay core (``replay_open_loop`` and the
     scheduler's ``replay_with_driver`` parameterize only the tick).
 
@@ -375,7 +473,9 @@ def _replay(svc: AsyncRetrievalService, queries, weight_ids, arrivals,
     ticks at every arrival instant — those ticks never launch anything
     (no deadline has newly expired there), they only give a driver's
     prefetch policy its lead time, so both parameterizations stay
-    bit-exact on the same trace by construction.
+    bit-exact on the same trace by construction.  ``tenants`` optionally
+    names the submitting tenant per request (multi-tenant QoS traces);
+    admission rejections (``RateLimited``) propagate to the caller.
     """
     if not isinstance(svc.clock, ManualClock):
         raise TypeError("open-loop replay requires a ManualClock service")
@@ -385,6 +485,8 @@ def _replay(svc: AsyncRetrievalService, queries, weight_ids, arrivals,
     nq = len(queries)
     if not (len(weight_ids) == len(arrivals) == nq):
         raise ValueError("queries / weight_ids / arrivals length mismatch")
+    if tenants is not None and len(tenants) != nq:
+        raise ValueError("tenants length must match queries")
     if np.any(np.diff(arrivals) < 0):
         raise ValueError("arrivals must be non-decreasing")
     k = svc.batcher.cfg.k
@@ -397,22 +499,35 @@ def _replay(svc: AsyncRetrievalService, queries, weight_ids, arrivals,
             n_checked=np.empty(0, np.int32),
         ), np.empty(0)
 
+    def fire(nd: float) -> None:
+        # a QoS capacity can defer expired work, so nd may already be in
+        # the past — hold time still and tick again (each tick grants a
+        # fresh fair-queue budget).  A tick that then launches nothing is
+        # a permanent stall (capacity below the cheapest launch cost):
+        # fail loudly instead of spinning forever
+        svc.clock.advance_to(max(nd, svc.clock()))
+        before = svc.pending_count
+        tick()
+        if svc.pending_count == before and svc.next_deadline() == nd:
+            raise RuntimeError(
+                "replay stalled: an expired launch never fires — is "
+                "qos capacity_per_tick below the cheapest launch cost?"
+            )
+
     futs: list[QueryFuture] = []
     for i in range(nq):
         while True:  # fire deadlines that expire before this arrival
             nd = svc.next_deadline()
             if nd is None or nd > arrivals[i]:
                 break
-            svc.clock.advance_to(nd)
-            tick()
+            fire(nd)
         svc.clock.advance_to(arrivals[i])
         if tick_at_arrivals:
             tick()
-        futs.append(svc.submit(queries[i], weight_ids[i]))
+        tenant = None if tenants is None else tenants[i]
+        futs.append(svc.submit(queries[i], weight_ids[i], tenant=tenant))
     while svc.pending_count:  # run out the tail
-        nd = svc.next_deadline()
-        svc.clock.advance_to(nd)
-        tick()
+        fire(svc.next_deadline())
 
     answers = [f.result() for f in futs]
     t_resolved = np.array([f.t_resolved for f in futs])
@@ -428,7 +543,7 @@ def _replay(svc: AsyncRetrievalService, queries, weight_ids, arrivals,
 
 
 def replay_open_loop(svc: AsyncRetrievalService, queries, weight_ids,
-                     arrivals):
+                     arrivals, tenants=None):
     """Open-loop trace replay on a ManualClock (virtual time).
 
     ``arrivals`` are absolute non-decreasing virtual times, one per query;
@@ -442,4 +557,5 @@ def replay_open_loop(svc: AsyncRetrievalService, queries, weight_ids,
     ``waits[i]`` is the virtual seconds request ``i`` spent queued before
     its batch launched.
     """
-    return _replay(svc, queries, weight_ids, arrivals, tick=svc.poll)
+    return _replay(svc, queries, weight_ids, arrivals, tick=svc.poll,
+                   tenants=tenants)

@@ -46,6 +46,7 @@ from ..index.builder import (
 )
 from ..index.config import IndexConfig, pad_beta, pad_levels
 from ..index.engine import QueryStepCache, encode_queries
+from .qos import DegradeStep
 from .state_cache import StateCache
 
 __all__ = [
@@ -100,6 +101,12 @@ class ServiceConfig:
     # (distributed.group_sharding.serving_mesh); per-shard passes merge
     # with exact collectives, so answers are bit-identical at any shard
     # count.  Ignored when an explicit mesh is passed to the Batcher
+    degrade_ladder: tuple = ()  # pre-planned (c, k) relaxation rungs
+    # (qos.DegradeStep, mildest first).  Rung 0 is this config's strict
+    # (plan.c, k); rung r >= 1 serves at degrade_ladder[r - 1].  Every
+    # rung's step is compiled at warmup (c/k are shape-signature keys),
+    # so runtime degradation never recompiles; rung answers with k' < k
+    # are padded -1/inf back to k so result shapes never change
 
     def __post_init__(self):
         # normalize the CLI spellings onto the IndexConfig values (frozen
@@ -178,6 +185,17 @@ class ServiceConfig:
             )
         if self.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        for i, step in enumerate(self.degrade_ladder):
+            if not isinstance(step, DegradeStep):
+                raise ValueError(
+                    f"degrade_ladder[{i}] must be a qos.DegradeStep, got "
+                    f"{step!r}"
+                )
+            if step.k > self.k:
+                raise ValueError(
+                    f"degrade_ladder[{i}].k={step.k} exceeds the strict "
+                    f"k={self.k} (relaxation must not widen results)"
+                )
         try:
             jnp.dtype(self.vec_dtype)
         except TypeError:
@@ -381,8 +399,15 @@ class Batcher:
             group_sharding.serving_mesh(cfg.n_shards)
         )
         self.cfg = cfg
+        for i, step in enumerate(cfg.degrade_ladder):
+            if step.c < plan.c:
+                raise ValueError(
+                    f"degrade_ladder[{i}].c={step.c} is below the strict "
+                    f"plan c={plan.c} (relaxation must not tighten the "
+                    f"approximation ratio)"
+                )
         self.step_cache = QueryStepCache()
-        self._group_cfgs: dict[int, IndexConfig] = {}
+        self._group_cfgs: dict[tuple[int, int], IndexConfig] = {}
         self._delta = None  # lazy DeltaIndex, created on first write
         # Paging moves sharded states per shard (each chunk device_put
         # straight to its device, no all-rows host concatenation); the
@@ -431,18 +456,45 @@ class Batcher:
             block -= 1
         return block
 
-    def group_config(self, gi: int) -> IndexConfig:
-        """Padded IndexConfig for group ``gi`` (the jit-cache key)."""
-        cfg = self._group_cfgs.get(gi)
+    @property
+    def n_rungs(self) -> int:
+        """Ladder depth: valid rungs are ``0`` (strict) .. ``n_rungs``."""
+        return len(self.cfg.degrade_ladder)
+
+    def rung_params(self, rung: int) -> tuple[int, int]:
+        """Effective ``(c, k)`` at ladder ``rung`` (0 = strict)."""
+        if not 0 <= rung <= self.n_rungs:
+            raise ValueError(
+                f"rung must be in [0, {self.n_rungs}], got {rung}"
+            )
+        if rung == 0:
+            return int(self.plan.c), int(self.cfg.k)
+        step = self.cfg.degrade_ladder[rung - 1]
+        return int(step.c), int(step.k)
+
+    def group_config(self, gi: int, rung: int = 0) -> IndexConfig:
+        """Padded IndexConfig for group ``gi`` (the jit-cache key).
+
+        ``rung`` selects a degradation rung of the pre-planned (c, k)
+        relaxation ladder (``ServiceConfig.degrade_ladder``); rung 0 is
+        the strict config.  Rung configs differ only in the scalar
+        ``c``/``k`` (and the derived budget) — state shapes are
+        identical, so every rung serves from the *same* cached group
+        state, and each rung's step is a distinct pre-compiled shape
+        signature.
+        """
+        key = (gi, rung)
+        cfg = self._group_cfgs.get(key)
         if cfg is None:
             g = self.plan.groups[gi]
+            c_eff, k_eff = self.rung_params(rung)
             cfg = IndexConfig(
                 n=self.row_capacity(),
                 d=self.plan.d,
                 beta=pad_beta(g.beta_group, self.cfg.beta_buckets),
                 q_batch=self.cfg.q_batch,
-                k=self.cfg.k,
-                c=self.plan.c,
+                k=k_eff,
+                c=c_eff,
                 n_levels=pad_levels(g.n_levels_max, self.cfg.level_step),
                 p=self.plan.p,
                 block_n=self._block_n(),
@@ -454,7 +506,7 @@ class Batcher:
                 n_shards=self.mesh.size,
                 shard_axis=self.mesh.axis_names[0],
             )
-            self._group_cfgs[gi] = cfg
+            self._group_cfgs[key] = cfg
         return cfg
 
     def _build_state(self, gi: int):
@@ -500,6 +552,11 @@ class Batcher:
     def warmup(self, groups=None) -> None:
         """Build states and compile steps ahead of traffic.
 
+        Every ladder rung's step is compiled here too (rung ``c``/``k``
+        are shape-signature keys), so runtime QoS degradation only ever
+        *switches* among pre-compiled steps — the step-cache counter is
+        pinned across overload.
+
         Under a residency budget (default offload mode) the
         earliest-built states are evicted to host as later ones land,
         leaving the tail resident and the rest warm for restore — first
@@ -513,7 +570,8 @@ class Batcher:
             (groups if groups is not None else range(self.plan.n_groups))
         ]
         for gi in gids:
-            self.step_cache.get(self.mesh, self.group_config(gi))
+            for rung in range(self.n_rungs + 1):
+                self.step_cache.get(self.mesh, self.group_config(gi, rung))
         if not self.cfg.offload_evicted:
             gids = self._budget_fitting_tail(gids)
         for gi in gids:
@@ -634,7 +692,7 @@ class Batcher:
             return pad_cols(g.encode_host(queries), cfg.beta)[take]
         return np.asarray(encode_queries(state, queries[take]))
 
-    def run_batch(self, gi: int, queries, weight_ids):
+    def run_batch(self, gi: int, queries, weight_ids, rung: int = 0):
         """One compiled-step launch for 1..q_batch same-group requests.
 
         Pads ragged input by cycling the real rows, encodes the padded
@@ -643,6 +701,12 @@ class Batcher:
         real rows.  Both frontends answer every query through this method,
         which is what makes them bit-exact on identical traffic.
 
+        ``rung`` serves the batch at a degradation rung of the (c, k)
+        relaxation ladder: the same group state, a pre-compiled relaxed
+        step, and answers padded ``-1``/``inf`` back to the strict ``k``
+        so result shapes never change.  Rung 0 is the strict path and
+        is bit-identical to the pre-QoS behavior.
+
         The group's state is leased from the ``StateCache`` around the
         launch: pinned (unevictable) while the compiled step runs, then
         released, so a budgeted cache can page any group between launches
@@ -650,7 +714,7 @@ class Batcher:
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
-        cfg = self.group_config(gi)
+        cfg = self.group_config(gi, rung)
         step = self.step_cache.get(self.mesh, cfg)
         real = len(queries)
         take = pad_take(real, cfg.q_batch)
@@ -678,6 +742,15 @@ class Batcher:
             dists = np.asarray(d_b)[:real]
             stop = np.asarray(stop_b)[:real]
             chk = np.asarray(chk_b)[:real]
+        if cfg.k < self.cfg.k:
+            # degraded rung: pad the short top-k back to the strict width
+            # (missing-slot conventions, so downstream merge/augment and
+            # every result consumer see one uniform shape)
+            pad_ids = np.full((real, self.cfg.k), -1, ids.dtype)
+            pad_d = np.full((real, self.cfg.k), np.inf, dists.dtype)
+            pad_ids[:, : cfg.k] = ids
+            pad_d[:, : cfg.k] = dists
+            ids, dists = pad_ids, pad_d
         if self._delta is not None:
             # translate appended state rows to global ids, merge the exact
             # delta-scan hits, filter tombstones (no-op passthrough for a

@@ -143,6 +143,7 @@ class PrefetchPolicy:
         pending: dict[int, tuple[int, float]],
         q_batch: int,
         now: float,
+        cache=None,
     ) -> tuple[list[int], set[int]]:
         """Return ``(prefetch_order, protect_set)`` for this tick.
 
@@ -151,7 +152,10 @@ class PrefetchPolicy:
         the list of groups to ``StateCache.prefetch``, most urgent
         first; ``protect_set`` is shielded from eviction until the next
         tick (it must contain every group the order asks to prefetch,
-        or a later prefetch could evict an earlier one).
+        or a later prefetch could evict an earlier one).  ``cache``
+        optionally passes the shared ``StateCache`` so a policy can read
+        learned restore-cost estimates (``restore_eta``); policies must
+        accept ``cache=None`` and fall back to static knobs.
         """
         raise NotImplementedError
 
@@ -174,24 +178,40 @@ class DeadlinePrefetch(PrefetchPolicy):
     now would serialize into the launch's critical path anyway — letting
     the launch fault it in keeps the hit/overlap counters honest (a
     same-tick restore must count as a miss, not an overlap).
+
+    When the driver passes the shared ``StateCache``, the horizon is
+    *learned* per group: the cache's ``RestoreCostModel`` (EWMA bytes/s
+    over observed restore timings) predicts that group's restore time,
+    and the effective horizon is ``max(horizon_s, eta_margin * eta)`` —
+    a big state whose restore takes longer than the static knob is
+    prefetched proportionally earlier, while ``horizon_s`` stays a
+    deterministic floor so behaviour without timing data (and every
+    virtual-time replay) is unchanged.
     """
 
     horizon_s: float = 0.050
     depth_fraction: float = 0.5
+    eta_margin: float = 1.5  # prefetch this many predicted-restores early
 
     def plan(
         self,
         pending: dict[int, tuple[int, float]],
         q_batch: int,
         now: float,
+        cache=None,
     ) -> tuple[list[int], set[int]]:
         """Imminent groups, soonest oldest-deadline first."""
         fill = max(1, math.ceil(self.depth_fraction * q_batch))
         due, coming = [], []
         for gi, (depth, deadline) in pending.items():
+            horizon = self.horizon_s
+            if cache is not None:
+                horizon = max(
+                    horizon, self.eta_margin * cache.restore_eta(gi)
+                )
             if deadline <= now:  # launching this tick: protect only
                 due.append(gi)
-            elif deadline - now <= self.horizon_s or depth >= fill:
+            elif deadline - now <= horizon or depth >= fill:
                 coming.append((deadline, gi))
         order = [gi for _, gi in sorted(coming)]
         return order, set(order) | set(due)
@@ -319,7 +339,8 @@ class ServiceDriver:
                         self.stats.n_deadline_misses += 1
             if self.prefetch is not None:
                 order, shield = self.prefetch.plan(
-                    pending, self.svc.batcher.cfg.q_batch, now
+                    pending, self.svc.batcher.cfg.q_batch, now,
+                    cache=self.cache,
                 )
                 due_gis = [gi for _, gi in sorted(due)]
                 kept = self._clamp_to_budget(
@@ -332,6 +353,11 @@ class ServiceDriver:
                         self.stats.n_prefetches_issued += 1
             n = self.svc.poll(now)
             self.stats.n_launches += n
+            if self.svc.qos is not None:
+                # close the tick for degradation hysteresis: sustained
+                # deferral pressure steps degradable tenants down the
+                # (c, k) ladder; sustained clear ticks step them back up
+                self.svc.qos.observe_tick()
             if n == 0 and self.svc.idle_work():
                 self.stats.n_idle_compactions += 1
             self.stats.n_ticks += 1
@@ -363,8 +389,8 @@ class ServiceDriver:
             nbytes += nb
         return kept
 
-    def submit(self, query, weight_id, deadline: float | None = None
-               ) -> QueryFuture:
+    def submit(self, query, weight_id, deadline: float | None = None,
+               tenant: str | None = None) -> QueryFuture:
         """Thread-safe ``AsyncRetrievalService.submit`` passthrough.
 
         Serializes against a running driver thread; a full buffer still
@@ -372,7 +398,8 @@ class ServiceDriver:
         the new request's deadline is picked up immediately.
         """
         with self._lock:
-            return self.svc.submit(query, weight_id, deadline)
+            return self.svc.submit(query, weight_id, deadline,
+                                   tenant=tenant)
 
     def drain(self) -> int:
         """Thread-safe ``AsyncRetrievalService.drain`` passthrough."""
@@ -477,7 +504,7 @@ class ServiceDriver:
 
 
 def replay_with_driver(driver: ServiceDriver, queries, weight_ids,
-                       arrivals):
+                       arrivals, tenants=None):
     """Open-loop trace replay stepped by a ``ServiceDriver`` (virtual time).
 
     The driver-owned parameterization of the same replay core behind
@@ -494,4 +521,5 @@ def replay_with_driver(driver: ServiceDriver, queries, weight_ids,
     ``waits[i]`` is the virtual seconds request ``i`` spent queued.
     """
     return _replay(driver.svc, queries, weight_ids, arrivals,
-                   tick=driver.step, tick_at_arrivals=True)
+                   tick=driver.step, tick_at_arrivals=True,
+                   tenants=tenants)

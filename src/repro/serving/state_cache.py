@@ -43,6 +43,14 @@ plus vectors ``(n, d)`` — dominates the serving footprint.  Keeping every
             and host copies) while every other group's state — and every
             compiled step — survives untouched
 
+Misses are fault-tolerant: a raising restore/build executor is retried a
+bounded number of times (``restore_retries``, with optional doubling
+backoff) before the error propagates, the host copy survives a failed
+restore, and a failing *prefetch* is contained entirely — counted
+``n_prefetch_wasted``, never raising into the scheduler tick.  Observed
+miss timings feed a ``RestoreCostModel`` (EWMA bytes/s) that prices
+``restore_eta(gi)`` for the scheduler's learned prefetch horizon.
+
 Byte accounting comes from ``IndexConfig.state_nbytes`` (the *padded*
 shapes actually materialized), so budgets are enforceable before any state
 is built.  Counters (hits / builds / restores / evictions) feed
@@ -59,10 +67,69 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Callable
 
-__all__ = ["CacheStats", "EvictionCandidate", "StateCache"]
+__all__ = [
+    "CacheStats",
+    "EvictionCandidate",
+    "RestoreCostModel",
+    "StateCache",
+]
+
+
+class RestoreCostModel:
+    """Learned host-to-device restore bandwidth (EWMA bytes/second).
+
+    The scheduler's prefetch horizon used to be a hand-set knob
+    (``DeadlinePrefetch.horizon_s``); this model learns the real figure
+    from observed restore (and cold-build) timings instead.  Every
+    ``StateCache`` miss feeds ``observe(nbytes, seconds)``; the
+    exponentially-weighted moving average smooths transient latency
+    spikes while tracking genuine bandwidth shifts.  ``eta(nbytes)``
+    then prices a pending restore, and the prefetch policy widens its
+    horizon to ``max(floor, margin * eta)`` — the hand-set horizon
+    survives as a deterministic floor, so virtual-time replays (whose
+    deadlines are not wall-clock commensurable) behave exactly as
+    before, while a deployment whose restores are genuinely slow gets a
+    proportionally earlier prefetch.
+    """
+
+    def __init__(
+        self,
+        alpha: float = 0.2,
+        default_bytes_per_s: float = 4e9,
+    ):
+        if not (0 < alpha <= 1):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        if not (default_bytes_per_s > 0):
+            raise ValueError(
+                f"default_bytes_per_s must be > 0, got {default_bytes_per_s}"
+            )
+        self.alpha = float(alpha)
+        self._bytes_per_s = float(default_bytes_per_s)
+        self.n_observed = 0
+
+    @property
+    def bytes_per_s(self) -> float:
+        """Current bandwidth estimate (the prior until first observed)."""
+        return self._bytes_per_s
+
+    def observe(self, nbytes: int, seconds: float) -> None:
+        """Fold one observed transfer into the EWMA (bad samples skipped)."""
+        if nbytes <= 0 or not (seconds > 0):
+            return  # clock granularity can produce 0.0 — not a rate
+        rate = nbytes / seconds
+        if self.n_observed == 0:
+            self._bytes_per_s = rate  # first sample replaces the prior
+        else:
+            self._bytes_per_s += self.alpha * (rate - self._bytes_per_s)
+        self.n_observed += 1
+
+    def eta(self, nbytes: int) -> float:
+        """Predicted seconds to restore an ``nbytes`` state."""
+        return max(nbytes, 0) / self._bytes_per_s
 
 
 @dataclasses.dataclass
@@ -78,6 +145,8 @@ class CacheStats:
     n_prefetch_wasted: int = 0  # prefetched states evicted before any acquire
     n_restore_overlapped: int = 0  # prefetch restores later consumed by an
     # acquire: the upload overlapped other work instead of blocking a launch
+    n_restore_retries: int = 0  # failed restore/build attempts that were
+    # retried (bounded by StateCache.restore_retries per miss)
     resident_bytes: int = 0  # current accounted residency (not a counter:
     # kept in sync by the cache, survives reset_stats)
     device_budget_bytes: int | None = None  # the cache's byte budget, for
@@ -119,6 +188,7 @@ class CacheStats:
             n_prefetches=self.n_prefetches,
             n_prefetch_wasted=self.n_prefetch_wasted,
             n_restore_overlapped=self.n_restore_overlapped,
+            n_restore_retries=self.n_restore_retries,
             hit_rate=self.hit_rate,
             resident_bytes=self.resident_bytes,
             budget_utilization=self.budget_utilization,
@@ -188,6 +258,20 @@ class StateCache:
         resident group).  None keeps the classic least-recently-used
         choice; ``serving.scheduler.CostAwareEviction`` is the cost-aware
         default the real-time driver installs.
+    restore_retries:
+        Bounded retry budget for a failing restore or build: a raising
+        executor is retried up to this many times per miss before the
+        exception propagates (``acquire``) or the prefetch is written
+        off as wasted (``prefetch``).  A transient device hiccup —
+        exactly the regime paging exists for — therefore recovers
+        instead of poisoning a lease.  0 disables retries.
+    retry_backoff_s:
+        Base backoff slept between retry attempts (doubling per
+        attempt).  The default 0.0 retries immediately, keeping every
+        test and virtual-time replay free of wall-clock sleeps.
+    cost_model:
+        The learned restore-bandwidth model fed by observed miss
+        timings (``RestoreCostModel``); None installs a default one.
     """
 
     def __init__(
@@ -201,6 +285,9 @@ class StateCache:
         restore: Callable[[int, object], object] | None = None,
         on_event: Callable[[int, str], None] | None = None,
         eviction_policy: Callable[[tuple], int] | None = None,
+        restore_retries: int = 2,
+        retry_backoff_s: float = 0.0,
+        cost_model: RestoreCostModel | None = None,
     ):
         if max_resident_groups is not None and max_resident_groups < 1:
             raise ValueError(
@@ -214,6 +301,20 @@ class StateCache:
             )
         if offload is not None and restore is None:
             raise ValueError("offload requires a restore callable")
+        if restore_retries < 0:
+            raise ValueError(
+                f"restore_retries must be >= 0, got {restore_retries}"
+            )
+        if retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}"
+            )
+        self.restore_retries = int(restore_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self._sleep = time.sleep
+        self.cost_model = (
+            cost_model if cost_model is not None else RestoreCostModel()
+        )
         self._build = build
         self._nbytes_of = nbytes_of
         self.max_resident_groups = max_resident_groups
@@ -269,6 +370,18 @@ class StateCache:
         """
         entry = self._resident.get(int(gi))
         return entry.nbytes if entry is not None else self._nbytes_of(gi)
+
+    def restore_eta(self, gi: int) -> float:
+        """Predicted seconds to page group ``gi`` in, from observed rates.
+
+        ``RestoreCostModel`` bandwidth applied to the group's accounted
+        bytes — what the scheduler's prefetch policy widens its horizon
+        with (0.0 for an already-resident group: nothing to restore).
+        """
+        gi = int(gi)
+        if gi in self._resident:
+            return 0.0
+        return self.cost_model.eta(self.nbytes_of(gi))
 
     def version_of(self, gi: int) -> int:
         """Current version of group ``gi`` (bumped by invalidate/replace)."""
@@ -346,14 +459,18 @@ class StateCache:
             # restore before popping: if the upload raises (device OOM —
             # the regime paging exists for), the host copy survives and a
             # retry restores instead of silently cold-rebuilding
-            entry.state = self._restore(gi, entry.host)
+            host = entry.host
+            entry.state = self._attempt(
+                lambda: self._restore(gi, host), nbytes
+            )
             del self._offloaded[gi]
             entry.host = None
             self.stats.n_restores += 1
             kind = "restore"
         else:
             entry = _Entry(
-                state=self._build(gi), nbytes=nbytes, version=version
+                state=self._attempt(lambda: self._build(gi), nbytes),
+                nbytes=nbytes, version=version,
             )
             self.stats.n_builds += 1
             kind = "build"
@@ -363,6 +480,30 @@ class StateCache:
         self._on_event(gi, kind)
         entry.prefetched = None
         return entry, kind
+
+    def _attempt(self, run: Callable[[], object], nbytes: int) -> object:
+        """One restore/build with bounded retries and timing feedback.
+
+        Retries a raising executor up to ``restore_retries`` times
+        (optionally backing off, doubling per attempt) before letting
+        the exception propagate — a transient failure recovers in place
+        instead of poisoning the caller's lease.  Successful attempts
+        feed their observed transfer time to the ``RestoreCostModel``.
+        """
+        for attempt in range(self.restore_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                state = run()
+            except Exception:
+                if attempt >= self.restore_retries:
+                    raise
+                self.stats.n_restore_retries += 1
+                backoff = self.retry_backoff_s * (2 ** attempt)
+                if backoff > 0:
+                    self._sleep(backoff)
+                continue
+            self.cost_model.observe(nbytes, time.perf_counter() - t0)
+            return state
 
     def release(self, gi: int) -> None:
         """Unpin one ``acquire`` of group ``gi`` (making it evictable)."""
@@ -396,12 +537,28 @@ class StateCache:
         ``n_restore_overlapped`` when the prefetch restored), while an
         eviction or invalidation before any acquire counts the work as
         ``n_prefetch_wasted``.  Returns True when work was issued.
+
+        A prefetch whose restore/build *fails* (after the cache's
+        bounded retries) is contained here: the work is written off as
+        ``n_prefetch_wasted`` and False is returned, with no exception
+        escaping — a speculative page-in must never take the scheduler
+        tick down, and the eventual launch-time ``acquire`` still
+        surfaces a persistent fault.  The host copy survives a failed
+        restore (see ``_materialize``), so nothing is lost either way.
         """
         gi = int(gi)
         entry = self._resident.get(gi)
         if entry is not None and entry.version == self.version_of(gi):
             return False
-        entry, kind = self._materialize(gi)
+        try:
+            entry, kind = self._materialize(gi)
+        except Exception:
+            # speculative work only: swallow, count, let acquire retry
+            self.stats.n_prefetches += 1
+            self._on_event(gi, "prefetch")
+            self.stats.n_prefetch_wasted += 1
+            self._on_event(gi, "prefetch_wasted")
+            return False
         entry.prefetched = kind
         self.stats.n_prefetches += 1
         self._on_event(gi, "prefetch")

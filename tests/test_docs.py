@@ -37,6 +37,7 @@ DOCSTRING_SCOPE = [
     "src/repro/serving/async_service.py",
     "src/repro/serving/state_cache.py",
     "src/repro/serving/scheduler.py",
+    "src/repro/serving/qos.py",
     "src/repro/serving/delta.py",
     "src/repro/serving/decode.py",
     "src/repro/core/serving_plan.py",
@@ -59,7 +60,7 @@ TINY_OVERRIDES = {
     "--shards": "1",
 }
 _STORE_TRUE = {"--check", "--async", "--no-pallas", "--driver",
-               "--prefetch"}
+               "--prefetch", "--qos"}
 
 
 def _fenced_blocks(text: str) -> list[str]:
@@ -175,7 +176,11 @@ def test_docs_cross_links():
                    "purge=True", "group_sharding.py", "serving_mesh",
                    "state_shardings", "strict=True",
                    "build_group_state_per_host",
-                   "offload_state_sharded", "n_shards"):
+                   "offload_state_sharded", "n_shards",
+                   "qos.py", "QosScheduler", "QosClass",
+                   "DeficitRoundRobin", "TokenBucket", "DegradeStep",
+                   "degrade_ladder", "RateLimited", "capacity_per_tick",
+                   "degrade_after"):
         assert anchor in arch, f"ARCHITECTURE.md lost its {anchor} coverage"
 
 

@@ -127,9 +127,10 @@ def test_discard_mode_rebuilds_instead_of_restoring():
     assert cache.stats.n_restores == 0
 
 
-def test_failed_restore_keeps_host_copy():
-    """A restore that raises (device OOM) must leave the host copy in
-    place so a retry restores instead of silently cold-rebuilding."""
+def test_transient_restore_failure_retries_in_place():
+    """A restore that raises once (device OOM) is retried inside the
+    same acquire — the caller sees a working lease, and the retry is
+    counted instead of surfacing as an exception."""
     fail = {"next": True}
 
     def restore(gi, host):
@@ -147,9 +148,39 @@ def test_failed_restore_keeps_host_copy():
         pass
     with cache.lease(1):  # evicts 0 to host
         pass
+    with cache.lease(0) as state:  # transient failure recovers in place
+        assert state == ("dev", 0)
+    assert cache.stats.n_restore_retries == 1
+    assert cache.stats.n_restores == 1
+    assert cache.stats.n_builds == 2  # 0 was never rebuilt after offload
+
+
+def test_failed_restore_keeps_host_copy():
+    """A restore that keeps raising past the retry budget must propagate
+    *and* leave the host copy in place so a later acquire restores
+    instead of silently cold-rebuilding."""
+    fail = {"left": 10}
+
+    def restore(gi, host):
+        if fail["left"] > 0:
+            fail["left"] -= 1
+            raise RuntimeError("injected device OOM")
+        return host[1]
+
+    cache = StateCache(
+        build=lambda gi: ("dev", gi), nbytes_of=lambda gi: 10,
+        max_resident_groups=1, restore_retries=2,
+        offload=lambda s: ("host", s), restore=restore,
+    )
+    with cache.lease(0):
+        pass
+    with cache.lease(1):  # evicts 0 to host
+        pass
     with pytest.raises(RuntimeError, match="injected"):
-        cache.acquire(0)
+        cache.acquire(0)  # burns 3 attempts (1 + 2 retries), all fail
     assert not cache.is_resident(0)
+    assert cache.stats.n_restore_retries == 2
+    fail["left"] = 0  # fault clears
     with cache.lease(0) as state:  # retry restores the preserved copy
         assert state == ("dev", 0)
     assert cache.stats.n_restores == 1
