@@ -52,6 +52,11 @@ pins a baseline for that path:
            bronze down the pre-compiled (c, k) relaxation ladder
            (degradation on vs off), holding bronze recall above the
            rung's planned bound with zero new compiles
+  sweep 9  observability overhead: the sweep-6 driver workload (open-loop
+           trace, 0.5x paging budget, prefetch on) served with the obs
+           layer off vs fully on (trace spans + profiler over the
+           always-on metrics registry) — answers must stay bit-exact and
+           the p50 per-launch driver-step time may pay < 5% overhead
 
 Validation checks assert the structural claims future PRs must not regress:
 compiled steps stay below group count (shape-bucket sharing), full batches
@@ -59,8 +64,10 @@ beat 1-query submissions on throughput, the async frontend answers the
 trace bit-exactly, deadline batching lifts mean occupancy over
 single-submission on every swept configuration, paging stays bit-exact
 with live eviction/restore traffic below full residency, prefetch
-strictly improves the hit rate and miss rate at the same budget, and
-sharded serving answers bit-identically at every shard count.
+strictly improves the hit rate and miss rate at the same budget, sharded
+serving answers bit-identically at every shard count, and turning the
+observability layer on neither changes an answer nor costs more than 5%
+of the p50 per-launch step time.
 
     PYTHONPATH=src python -m benchmarks.run --only serve_bench
 """
@@ -73,6 +80,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 
 import numpy as np
 
@@ -121,6 +129,28 @@ def _traffic(data, weight_ids_pool, n_queries, rng):
     )
     qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
     return qpts, wids
+
+
+def _metrics_condensed(service) -> dict:
+    """One-number-per-metric view of a service's registry snapshot.
+
+    Counters and gauges collapse to the sum over their label series;
+    histograms report total count and sum.  Small enough to pin a
+    per-sweep snapshot into the benchmark payload without drowning it.
+    """
+    out = {}
+    for name, entry in service.batcher.metrics.snapshot().items():
+        if entry["type"] == "histogram":
+            out[name] = {
+                "count": int(sum(s["count"]
+                                 for s in entry["series"].values())),
+                "sum": float(sum(s["sum"]
+                                 for s in entry["series"].values())),
+            }
+        else:
+            total = float(sum(entry["series"].values()))
+            out[name] = int(total) if total == int(total) else total
+    return out
 
 
 _SHARD_DEVICES = 8
@@ -205,6 +235,9 @@ def run(full: bool = False) -> dict:
     n_queries = 192 if full else 96
     data, weights, plan, svc = _build_service(n, d, n_weights, n_subset)
     rng = np.random.default_rng(3)
+    # condensed registry snapshot per sweep, from the service that ran it
+    # (sweep 7 runs in child processes and has no registry to read here)
+    metrics_by_sweep = {}
 
     # ---- sweep 1: throughput vs number of active groups ---------------------
     rows_groups = []
@@ -226,6 +259,7 @@ def run(full: bool = False) -> dict:
         ["groups", "queries", "q/s", "occupancy", "compiled steps"],
         rows_groups,
     )
+    metrics_by_sweep["1_active_groups"] = _metrics_condensed(svc)
 
     # ---- sweep 2: throughput vs batch occupancy -----------------------------
     rows_occ = []
@@ -245,6 +279,7 @@ def run(full: bool = False) -> dict:
         ["chunk", "queries", "q/s", "occupancy"],
         rows_occ,
     )
+    metrics_by_sweep["2_occupancy"] = _metrics_condensed(svc)
 
     # ---- sweep 3: deadline batching vs sync single-submission ---------------
     # one fixed open-loop trace per arrival rate; the sync baseline submits
@@ -289,6 +324,7 @@ def run(full: bool = False) -> dict:
          "p95 wait ms", "full", "deadline", "q/s"],
         rows_async,
     )
+    metrics_by_sweep["3_deadline_batching"] = _metrics_condensed(svc)
 
     # ---- sweep 4: group-state paging under a device-memory budget -----------
     # same mixed trace, submitted in q_batch chunks so group launches
@@ -330,6 +366,7 @@ def run(full: bool = False) -> dict:
          "restores", "rebuilds", "resident bytes"],
         rows_paging,
     )
+    metrics_by_sweep["4_paging"] = _metrics_condensed(psvc)
 
     # ---- sweep 5: streaming — query throughput / p50 latency vs write mix ---
     # mixed op stream at a fixed paging budget (cap = half the groups);
@@ -412,6 +449,7 @@ def run(full: bool = False) -> dict:
          "seals", "compactions", "rows compacted"],
         rows_stream,
     )
+    metrics_by_sweep["5_streaming"] = _metrics_condensed(ssvc)
 
     # ---- sweep 6: predictive prefetch under a tight paging budget -----------
     # the same open-loop trace stepped through the real-time ServiceDriver
@@ -464,6 +502,7 @@ def run(full: bool = False) -> dict:
          "q/s"],
         rows_sched,
     )
+    metrics_by_sweep["6_prefetch"] = _metrics_condensed(dsvc)
 
     # ---- sweep 7: sharded group states on a forced 8-device CPU mesh --------
     # fixed-size workload regardless of --full: each shard count pays a
@@ -592,6 +631,95 @@ def run(full: bool = False) -> dict:
          "bronze recall", "n degraded", "ladder steps", "gold wait ms",
          "bronze wait ms", "new compiles"],
         rows_qos,
+    )
+    metrics_by_sweep["8_qos"] = _metrics_condensed(qsvc)
+
+    # ---- sweep 9: observability overhead at the sweep-6 settings ------------
+    # the sweep-6 driver workload (same trace, same 0.5x paging budget,
+    # prefetch on) with the obs layer off vs fully on: per-query trace
+    # spans + per-signature profiler attribution over the always-on
+    # metrics registry.  Each driver.step() is wall-timed; the p50 is
+    # taken over the steps that launched a batch (arrival-only steps do
+    # no compiled work) and the reported step time is the median over
+    # OBS_REPS fresh-service runs per setting.  Spans mark stages on the
+    # virtual ManualClock but the *recording* cost lands on the wall
+    # steps being timed, which is exactly the overhead being priced.
+    OBS_REPS = 3
+
+    def _obs_run(obs_on: bool) -> dict:
+        osvc = RetrievalService(
+            plan, data,
+            cfg=ServiceConfig(k=K, q_batch=Q_BATCH, use_pallas=False,
+                              max_resident_groups=cap6, obs=obs_on),
+        )
+        osvc.warmup()
+        osvc.reset_stats()
+        oasvc = AsyncRetrievalService(osvc, max_delay_ms=2.0,
+                                      clock=ManualClock())
+        odriver = ServiceDriver(oasvc, prefetch=DeadlinePrefetch())
+        launch_times = []
+        seen = [0]
+        real_step = odriver.step
+
+        def timed_step():
+            t0 = time.perf_counter()
+            out = real_step()
+            dt = time.perf_counter() - t0
+            n = odriver.stats.n_launches
+            if n > seen[0]:
+                launch_times.append(dt)
+                seen[0] = n
+            return out
+
+        odriver.step = timed_step
+        res, _ = replay_with_driver(odriver, qpts, wids, arrivals6)
+        tr = osvc.batcher.tracer
+        return {
+            "res": res,
+            "p50_step_s": float(np.percentile(launch_times, 50)),
+            "n_launches": odriver.stats.n_launches,
+            "spans": (None if tr is None
+                      else (tr.n_started, tr.n_finished)),
+            "svc": osvc,
+        }
+
+    obs_runs = {"off": [], "on": []}
+    for _rep in range(OBS_REPS):
+        for label in ("off", "on"):
+            obs_runs[label].append(_obs_run(label == "on"))
+    obs_exact = all(
+        bool(np.array_equal(r_on["res"].ids, r_off["res"].ids)
+             and np.array_equal(r_on["res"].stop_levels,
+                                r_off["res"].stop_levels)
+             and np.array_equal(r_on["res"].n_checked,
+                                r_off["res"].n_checked))
+        for r_off, r_on in zip(obs_runs["off"], obs_runs["on"])
+    ) and bool(
+        np.array_equal(obs_runs["off"][0]["res"].ids, sched_ref.ids)
+    )
+    obs_spans_exact = all(
+        r["spans"] == (n_queries, n_queries) for r in obs_runs["on"]
+    )
+    obs_p50 = {
+        label: float(np.median([r["p50_step_s"] for r in runs]))
+        for label, runs in obs_runs.items()
+    }
+    obs_overhead = obs_p50["on"] / obs_p50["off"] - 1.0
+    rows_obs = [
+        [label, cap6, obs_runs[label][0]["n_launches"],
+         1e3 * obs_p50[label],
+         (0.0 if label == "off" else obs_overhead)]
+        for label in ("off", "on")
+    ]
+    print_table(
+        "observability overhead at the sweep-6 settings "
+        f"({'bit-exact' if obs_exact else 'MISMATCH'}, p50 per-launch "
+        f"step time over median of {OBS_REPS} runs)",
+        ["obs", "cap", "launches", "p50 step ms", "overhead"],
+        rows_obs,
+    )
+    metrics_by_sweep["9_obs_overhead"] = _metrics_condensed(
+        obs_runs["on"][-1]["svc"]
     )
 
     qps_full = rows_occ[-1][2]
@@ -747,6 +875,22 @@ def run(full: bool = False) -> dict:
                 and qos_results["off"]["new_compiles"] == 0
             ),
         },
+        {
+            "check": "obs: tracing + profiling on is bit-exact (ids, "
+                     "stop levels, n_checked) vs obs off on the sweep-6 "
+                     "workload",
+            "ok": obs_exact,
+        },
+        {
+            "check": "obs: every submitted query yields exactly one "
+                     "finished trace span on every obs-on run",
+            "ok": obs_spans_exact,
+        },
+        {
+            "check": "obs: p50 per-launch step-time overhead below 5% "
+                     "with the full obs layer on",
+            "ok": bool(obs_overhead < 0.05),
+        },
     ]
     for v in validation:
         print(("PASS " if v["ok"] else "FAIL ") + v["check"])
@@ -803,6 +947,14 @@ def run(full: bool = False) -> dict:
         "qos_capacity_per_tick": cap8,
         "qos_tick_s": tick8,
         "qos_overload_rate_qps": rate8,
+        "obs_sweep": rows_obs,
+        "obs_sweep_columns": [
+            "obs", "max_resident_groups", "n_launches",
+            "p50_launch_step_ms", "p50_overhead_fraction",
+        ],
+        "obs_overhead_fraction": float(obs_overhead),
+        "obs_reps": OBS_REPS,
+        "metrics_by_sweep": metrics_by_sweep,
         "validation": validation,
     }
     save("serve_bench", payload)

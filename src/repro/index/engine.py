@@ -374,12 +374,15 @@ class QueryStepCache:
     groups whose shapes quantize to the same buckets (config.pad_beta /
     pad_levels) produce equal configs and share one lowered+compiled step.
     ``n_compiled`` counts actual make_query_step calls — the serving tests
-    pin it to the number of distinct shape signatures.
+    pin it to the number of distinct shape signatures.  ``on_compile``
+    (optional, set by the observability layer) is called with the config
+    on every cache miss, attributing compiles to shape signatures.
     """
 
     def __init__(self):
         self._steps: dict = {}
         self.n_compiled = 0
+        self.on_compile = None  # hook: on_compile(cfg) per actual compile
 
     def get(self, mesh: Mesh, cfg: IndexConfig):
         key = (mesh, cfg)
@@ -388,6 +391,8 @@ class QueryStepCache:
             step = make_query_step(mesh, cfg)
             self._steps[key] = step
             self.n_compiled += 1
+            if self.on_compile is not None:
+                self.on_compile(cfg)
         return step
 
     def __len__(self) -> int:

@@ -44,7 +44,13 @@ Steps:
               sharing, throughput (plus queue-wait percentiles and launch
               causes in async mode, delta/compaction counters in mixed
               mode); ``--check`` cross-validates every answer against the
-              host oracle WLSHIndex.search_dense
+              host oracle WLSHIndex.search_dense.
+              ``--trace-out`` / ``--metrics-out`` / ``--profile-dir``
+              switch the observability layer on (bit-exact either way):
+              per-query trace spans to JSONL, the unified metrics
+              registry as Prometheus text or JSON, and per-signature
+              compile/dispatch attribution (plus a jax.profiler capture
+              when available)
 
 ``--plan-out`` persists the ServingPlan npz so a separate serving job can
 start without re-planning.
@@ -219,6 +225,50 @@ def _print_driver_report(driver: ServiceDriver) -> None:
           f"({d.n_deadline_misses}/{d.n_deadlines_due}), "
           f"{d.n_prefetches_issued} prefetches issued, "
           f"{d.n_idle_compactions} idle compactions")
+    # the registry-diff heartbeat a live deployment would log per tick
+    print(driver.tick_summary())
+
+
+def _finish_obs(args, svc) -> dict | None:
+    """Stop profiling and export the observability artifacts.
+
+    Runs after the serve phase: stops any in-flight ``jax.profiler``
+    trace, exports trace spans (``--trace-out``, JSONL), the metrics
+    registry (``--metrics-out``: ``.json`` = JSON snapshot, anything
+    else = Prometheus text exposition) and prints the per-signature
+    compile/dispatch attribution.  Returns the obs report dict (None
+    with observability off).
+    """
+    if not svc.cfg.obs:
+        return None
+    b = svc.batcher
+    out: dict = {}
+    if b.profiler is not None:
+        b.profiler.stop_trace()
+    if b.tracer is not None:
+        out["n_spans_started"] = b.tracer.n_started
+        out["n_spans_finished"] = b.tracer.n_finished
+        if args.trace_out:
+            n = b.tracer.export_jsonl(args.trace_out)
+            print(f"obs: {n} trace spans -> {args.trace_out} "
+                  f"({b.tracer.n_started} started / "
+                  f"{b.tracer.n_finished} finished)")
+    if args.metrics_out:
+        text = (b.metrics.to_json()
+                if args.metrics_out.endswith(".json")
+                else b.metrics.to_text())
+        with open(args.metrics_out, "w") as fh:
+            fh.write(text)
+        print(f"obs: metrics -> {args.metrics_out}")
+    if b.profiler is not None:
+        prof = b.profiler.summary()
+        out["profile"] = prof
+        print(f"obs: {prof['n_compiles']} step compiles attributed; "
+              f"dispatch by shape signature:")
+        for sig, row in prof["dispatch"].items():
+            print(f"  {sig}: {row['count']} launches, "
+                  f"mean {1e3 * row['mean_s']:.2f} ms")
+    return out
 
 
 def _print_cache_report(cache: dict) -> None:
@@ -265,6 +315,7 @@ def run(args) -> dict:
     if reserve is None:  # headroom for every op turning out to be an insert
         reserve = args.n_queries if args.insert_rate > 0 else 0
     ladder = args.degrade_ladder if args.qos else ()
+    obs = bool(args.trace_out or args.metrics_out or args.profile_dir)
     scfg = ServiceConfig(k=args.k, q_batch=args.q_batch,
                          max_delay_ms=args.max_delay_ms,
                          max_resident_groups=args.max_resident_groups,
@@ -273,8 +324,12 @@ def run(args) -> dict:
                          delta_reserve_rows=reserve,
                          use_pallas=args.use_pallas,
                          n_shards=args.shards,
-                         degrade_ladder=ladder)
+                         degrade_ladder=ladder,
+                         obs=obs)
     svc = RetrievalService(plan, data, cfg=scfg)
+    if obs and args.profile_dir:
+        svc.batcher.profiler.profile_dir = args.profile_dir
+        svc.batcher.profiler.start_trace()
     svc.warmup()
     t_build = time.time() - t0
     cache0 = svc.cache_summary()
@@ -364,6 +419,7 @@ def run(args) -> dict:
     if (args.max_resident_groups is not None
             or args.device_budget is not None or args.driver):
         _print_cache_report(cache)
+    obs_report = _finish_obs(args, svc)
 
     n_bad = 0
     if args.check:
@@ -389,6 +445,7 @@ def run(args) -> dict:
         "cache": cache,
         "n_check_failures": n_bad,
         "async": async_report,
+        "obs": obs_report,
     }
 
 
@@ -478,6 +535,7 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
               f"(pre + post compaction of {absorbed} rows), "
               f"{recompiled} recompiles")
         assert n_bad == 0, f"{n_bad} streaming checks failed"
+    obs_report = _finish_obs(args, svc)
     return {
         "n_groups": plan.n_groups,
         "beta_total": plan.beta_total,
@@ -492,6 +550,7 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
         "delta": svc.delta_summary(),
         "n_check_failures": n_bad,
         "async": None,
+        "obs": obs_report,
         "driver": driver.stats.summary() if driver is not None else None,
     }
 
@@ -583,6 +642,21 @@ def parse_args(argv=None):
                     metavar="BYTES",
                     help="page group states under this device byte budget "
                          "(accepts 512MB / 2GB / plain bytes)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="observability: export one JSONL trace span per "
+                         "served query to PATH (stage timestamps on the "
+                         "service clock + WLSH cost counters); implies "
+                         "the obs layer on")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="observability: write the unified metrics "
+                         "registry to PATH after serving (.json = JSON "
+                         "snapshot, anything else = Prometheus text "
+                         "exposition); implies the obs layer on")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="observability: per-shape-signature compile and "
+                         "dispatch-time attribution, plus a jax.profiler "
+                         "trace captured into DIR when the profiler is "
+                         "available; implies the obs layer on")
     ap.add_argument("--use-pallas", choices=["auto", "on", "off",
                                              "interpret"], default=None,
                     help="query kernel path: auto = per-backend fused "

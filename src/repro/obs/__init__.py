@@ -1,0 +1,37 @@
+"""Observability layer: metrics registry, per-query traces, profiling.
+
+Zero-dependency (stdlib + optional ``jax.profiler``) building blocks
+threaded through the serving stack:
+
+* :mod:`repro.obs.metrics` — typed counters / gauges / fixed-bucket
+  histograms in a thread-safe :class:`MetricsRegistry`; Prometheus-style
+  text exposition, JSON snapshot, tick-to-tick diffs.  All four legacy
+  stats surfaces (``Batcher.stats``, ``CacheStats``, ``DriverStats``,
+  ``TenantStats``) are thin views over this registry.
+* :mod:`repro.obs.trace` — per-query :class:`TraceSpan` lifecycle
+  (``submit -> route -> admit -> queue -> prefetch/restore -> launch ->
+  merge -> resolve``) on the injectable clock, ring-buffered by
+  :class:`Tracer` with JSONL export.
+* :mod:`repro.obs.profile` — scoped wrappers around ``jax.profiler``
+  plus per-step compile-count and dispatch-time attribution keyed by
+  ``IndexConfig.shape_signature()``.
+
+Tracing and profiling are gated behind ``ServiceConfig.obs`` (off by
+default, bit-exact on or off); the metrics registry always exists — the
+stats surfaces need it — and never touches device values.
+"""
+
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .profile import Profiler
+from .trace import STAGES, Tracer, TraceSpan
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Profiler",
+    "STAGES",
+    "TraceSpan",
+    "Tracer",
+]

@@ -1,0 +1,133 @@
+"""Profiling hooks: ``jax.profiler`` wrappers + per-shape attribution.
+
+The serving stack's compiled work is keyed by
+``IndexConfig.shape_signature()`` — one executable per signature, one
+signature per (shape bucket, rung, shard count, kernel path).  The
+:class:`Profiler` attributes the two costs that matter to that key:
+
+* **compile count** — how many distinct executables the step cache
+  built (step-cache churn and rung switches become directly visible);
+* **dispatch time** — wall seconds spent inside the compiled-step
+  launch, per signature.
+
+Both are host-side bookkeeping and never touch device values, so
+enabling them is bit-exact.  When ``jax.profiler`` is importable the
+dispatch scope additionally opens a ``TraceAnnotation`` region (so
+launches are labeled in a captured device trace), ``start_trace`` /
+``stop_trace`` bracket an on-demand profiler capture, and
+``save_memory_snapshot`` writes a device-memory profile — all guarded:
+a missing or stubbed ``jax.profiler`` degrades to timing-only.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+
+__all__ = ["Profiler"]
+
+
+def _jax_profiler():
+    """``jax.profiler`` when importable, else None (timing-only mode)."""
+    try:
+        from jax import profiler
+        return profiler
+    except Exception:
+        return None
+
+
+class Profiler:
+    """Per-``shape_signature`` compile/dispatch attribution + jax hooks."""
+
+    def __init__(self, profile_dir: str | None = None,
+                 timer=time.perf_counter):
+        """Attribute compiles/dispatches; ``profile_dir`` enables capture.
+
+        ``timer`` is injectable for deterministic tests; dispatch times
+        are wall-clock by nature (they measure real device work).
+        """
+        self.profile_dir = profile_dir
+        self._timer = timer
+        self._lock = threading.Lock()
+        self._compiles: dict[str, int] = {}
+        self._dispatch_s: dict[str, float] = {}
+        self._dispatch_n: dict[str, int] = {}
+        self._tracing = False
+
+    def record_compile(self, sig: str) -> None:
+        """Count one step compilation under signature ``sig``."""
+        with self._lock:
+            self._compiles[sig] = self._compiles.get(sig, 0) + 1
+
+    @contextlib.contextmanager
+    def dispatch(self, sig: str):
+        """Time one compiled-step launch, annotated in device traces."""
+        prof = _jax_profiler()
+        ctx = contextlib.nullcontext()
+        if prof is not None:
+            try:
+                ctx = prof.TraceAnnotation(f"wlsh_query_step[{sig}]")
+            except Exception:
+                ctx = contextlib.nullcontext()
+        t0 = self._timer()
+        try:
+            with ctx:
+                yield
+        finally:
+            dt = self._timer() - t0
+            with self._lock:
+                self._dispatch_s[sig] = self._dispatch_s.get(sig, 0.0) + dt
+                self._dispatch_n[sig] = self._dispatch_n.get(sig, 0) + 1
+
+    def start_trace(self) -> bool:
+        """Start a ``jax.profiler`` trace into ``profile_dir`` if possible."""
+        prof = _jax_profiler()
+        if prof is None or self.profile_dir is None or self._tracing:
+            return False
+        try:
+            prof.start_trace(self.profile_dir)
+        except Exception:
+            return False
+        self._tracing = True
+        return True
+
+    def stop_trace(self) -> bool:
+        """Stop an in-flight ``jax.profiler`` trace, if one is running."""
+        prof = _jax_profiler()
+        if prof is None or not self._tracing:
+            return False
+        self._tracing = False
+        try:
+            prof.stop_trace()
+        except Exception:
+            return False
+        return True
+
+    def save_memory_snapshot(self, path: str) -> bool:
+        """On-demand device-memory profile to ``path`` (best effort)."""
+        prof = _jax_profiler()
+        if prof is None:
+            return False
+        try:
+            prof.save_device_memory_profile(path)
+        except Exception:
+            return False
+        return True
+
+    def summary(self) -> dict:
+        """Compile counts and dispatch-time attribution per signature."""
+        with self._lock:
+            return {
+                "n_compiles": sum(self._compiles.values()),
+                "compiles": dict(self._compiles),
+                "dispatch": {
+                    sig: {
+                        "count": self._dispatch_n[sig],
+                        "total_s": self._dispatch_s[sig],
+                        "mean_s": (self._dispatch_s[sig]
+                                   / self._dispatch_n[sig]),
+                    }
+                    for sig in sorted(self._dispatch_n)
+                },
+            }

@@ -143,6 +143,7 @@ class _Pending:
     t_submit: float
     future: QueryFuture
     tenant: str = DEFAULT_TENANT
+    span: object = None  # obs.TraceSpan when tracing is enabled
 
 
 class AsyncRetrievalService:
@@ -183,11 +184,18 @@ class AsyncRetrievalService:
             raise ValueError(f"max_delay_ms must be >= 0, got {max_delay_ms}")
         self.max_delay_ms = float(max_delay_ms)
         self.clock = clock
+        # the batcher stamps launch-side trace-span stages on the same
+        # clock, so ManualClock replays produce deterministic traces
+        self.batcher.clock = clock
         # multi-tenant QoS: admission control + per-class SLO deadlines
         # on submit, weighted-fair capacity-bounded dequeue on poll, and
         # (driver-stepped) (c, k) degradation under sustained overload.
         # None = single-tenant service, bit-identical to the pre-QoS path
         self.qos = qos
+        if qos is not None:
+            # fold the scheduler's standalone counters into the serving
+            # stack's unified registry: one source of truth per stack
+            qos.bind_metrics(self.batcher.metrics)
         # background compaction: an idle poll (nothing expired to launch)
         # absorbs the streaming delta's *sealed* backlog into the main
         # group states, capacity permitting — the single-threaded analog
@@ -304,9 +312,23 @@ class AsyncRetrievalService:
             # a NaN/inf deadline would never compare expired in poll() and
             # would poison next_deadline() for every event-loop driver
             raise ValueError(f"deadline must be finite, got {deadline}")
+        tr = self.batcher.tracer
+        span = None
+        if tr is not None:
+            # past every reject path: an Overloaded / RateLimited /
+            # invalid submit never opens a span, so exactly one span
+            # exists per accepted query
+            span = tr.begin(weight_id=int(weight_id), group_id=gi,
+                            tenant=str(tenant))
+            t_routed = self.clock()
+            span.mark("submit", now)
+            span.mark("route", t_routed)
+            if self.qos is not None:
+                span.mark("admit", t_routed)
+            span.mark("queue", t_routed)
         fut = QueryFuture()
         pend = _Pending(query, int(weight_id), float(deadline), now, fut,
-                        str(tenant))
+                        str(tenant), span)
         q = self._pending[(gi, str(tenant))]
         q.append(pend)
         # with QoS attached, a full buffer launches at the next poll tick
@@ -432,12 +454,16 @@ class AsyncRetrievalService:
         # (c, k) step serves this launch; rung 0 (and qos=None) is the
         # strict configured parameters
         rung = self.qos.rung_of(tenant) if self.qos is not None else 0
+        tr = self.batcher.tracer
         try:
             ids, dists, stop, chk = self.batcher.run_batch(
                 gi,
                 np.stack([r.query for r in batch]),
                 np.array([r.weight_id for r in batch], np.int64),
                 rung=rung,
+                spans=(
+                    [r.span for r in batch] if tr is not None else None
+                ),
             )
         except Exception:
             # atomic launch: put the batch back (original order, ahead of
@@ -452,11 +478,20 @@ class AsyncRetrievalService:
         else:
             self.n_launched_drain += 1
         now = self.clock()
+        wait_h = self.batcher.metrics.histogram(
+            "wlsh_query_wait_seconds",
+            "submit-to-resolve wait on the service clock",
+        )
         for i, r in enumerate(batch):  # submission order within the launch
             r.future._resolve(QueryAnswer(
                 ids=ids[i], dists=dists[i], group_id=gi,
                 stop_level=int(stop[i]), n_checked=int(chk[i]),
             ), now)
+            wait_h.observe(now - r.t_submit)
+            if r.span is not None:
+                r.span.cause = cause
+                r.span.mark("resolve", now)
+                tr.finish(r.span)
             if self.qos is not None:
                 self.qos.on_resolved(
                     r.tenant, now - r.t_submit, now > r.deadline, rung

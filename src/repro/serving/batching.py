@@ -30,7 +30,9 @@ launches from the async frontend cannot thrash each other's states.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +40,7 @@ import numpy as np
 
 from ..core.serving_plan import ServingPlan
 from ..distributed import group_sharding
+from ..obs import MetricsRegistry, Profiler, Tracer
 from ..index.builder import (
     build_group_state,
     offload_state,
@@ -48,6 +51,8 @@ from ..index.config import IndexConfig, pad_beta, pad_levels
 from ..index.engine import QueryStepCache, encode_queries
 from .qos import DegradeStep
 from .state_cache import StateCache
+
+_NULL_SCOPE = contextlib.nullcontext()  # profiler-off dispatch scope
 
 __all__ = [
     "BatchPlan",
@@ -101,6 +106,13 @@ class ServiceConfig:
     # (distributed.group_sharding.serving_mesh); per-shard passes merge
     # with exact collectives, so answers are bit-identical at any shard
     # count.  Ignored when an explicit mesh is passed to the Batcher
+    obs: bool = False  # observability: per-query trace spans (obs.Tracer)
+    # and profiling hooks (obs.Profiler) on the serving path.  Host-side
+    # bookkeeping only — results are bit-exact on or off.  The metrics
+    # registry (Batcher.metrics) always exists regardless: the stats
+    # surfaces are views over it
+    obs_trace_capacity: int = 4096  # tracer ring: retain at most this
+    # many finished spans (older spans fall off; totals stay exact)
     degrade_ladder: tuple = ()  # pre-planned (c, k) relaxation rungs
     # (qos.DegradeStep, mildest first).  Rung 0 is this config's strict
     # (plan.c, k); rung r >= 1 serves at degrade_ladder[r - 1].  Every
@@ -185,6 +197,11 @@ class ServiceConfig:
             )
         if self.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.obs_trace_capacity < 1:
+            raise ValueError(
+                f"obs_trace_capacity must be >= 1, got "
+                f"{self.obs_trace_capacity}"
+            )
         for i, step in enumerate(self.degrade_ladder):
             if not isinstance(step, DegradeStep):
                 raise ValueError(
@@ -244,13 +261,19 @@ def coalesce(group_ids: np.ndarray, q_batch: int) -> list[BatchPlan]:
     return plans
 
 
-def run_plans(plans, queries, weight_ids, run_batch, k):
+def run_plans(plans, queries, weight_ids, run_batch, k, spans=None):
     """Execute every BatchPlan and merge outputs back to submission order.
 
     ``run_batch(group_id, queries, weight_ids)`` must return per-row
     ``(ids, dists, stop_levels, n_checked)`` for exactly the real rows it
     was handed (padding is its private business).  Shared by the sync
     frontend and the batching property tests, which pass a fake executor.
+
+    ``spans`` (optional) is one ``obs.TraceSpan`` per submission row;
+    each launch is handed its rows' spans via a ``spans=`` keyword so
+    the executor can stamp launch-side stages.  Fake executors without
+    the keyword keep working — the argument is only forwarded when
+    spans are present.
     """
     nq = len(queries)
     out_ids = np.full((nq, k), -1, np.int32)
@@ -258,8 +281,11 @@ def run_plans(plans, queries, weight_ids, run_batch, k):
     out_stop = np.zeros(nq, np.int32)
     out_chk = np.zeros(nq, np.int32)
     for bp in plans:
+        kw = {}
+        if spans is not None:
+            kw["spans"] = [spans[i] for i in bp.rows]
         ids, d, stop, chk = run_batch(
-            bp.group_id, queries[bp.rows], weight_ids[bp.rows]
+            bp.group_id, queries[bp.rows], weight_ids[bp.rows], **kw
         )
         out_ids[bp.rows] = ids
         out_d[bp.rows] = d
@@ -307,29 +333,49 @@ def merge_topk(ids, dists, extra_ids, extra_dists, k, drop=None):
 # ---------------------------------------------------------------------- stats
 
 
-@dataclasses.dataclass
 class GroupServeStats:
     """Per-group serving counters (reset with ``Batcher.reset_stats``).
 
-    Running sums, not samples: a long-lived service must not grow state
-    with traffic.
+    Since the observability PR this is a *read-only view* over the
+    stack's ``obs.MetricsRegistry`` — ``Batcher.run_batch`` and the
+    ``StateCache`` increment the registry counters directly, and each
+    attribute here reads the value labeled with this view's group.  One
+    source of truth; running sums, not samples, so a long-lived service
+    never grows state with traffic.
     """
 
-    n_queries: int = 0
-    n_batches: int = 0
-    n_padded: int = 0  # padded rows across ragged batches
-    stop_level_sum: int = 0
-    n_checked_sum: int = 0
-    # state-paging counters, mirrored from the StateCache per group
-    n_state_hits: int = 0  # launches that found the state resident
-    n_state_builds: int = 0  # cold builds of this group's state
-    n_state_restores: int = 0  # host-copy uploads after an eviction
-    n_state_evictions: int = 0  # times this group's state left the device
-    n_state_invalidations: int = 0  # compaction-driven version bumps
-    n_state_prefetches: int = 0  # scheduler-issued ahead-of-launch restores
-    n_state_prefetch_wasted: int = 0  # prefetches evicted before any launch
-    n_state_restore_overlapped: int = 0  # prefetched restores consumed by a
-    # launch (the upload overlapped other work instead of blocking it)
+    # attribute -> registry counter (all labeled {group=<gi>})
+    _COUNTERS = {
+        "n_queries": "wlsh_group_queries_total",
+        "n_batches": "wlsh_group_batches_total",
+        "n_padded": "wlsh_group_padded_rows_total",
+        "stop_level_sum": "wlsh_group_stop_levels_total",
+        "n_checked_sum": "wlsh_group_checked_total",
+        # state-paging counters, shared with CacheStats (same series)
+        "n_state_hits": "wlsh_state_hits_total",
+        "n_state_builds": "wlsh_state_builds_total",
+        "n_state_restores": "wlsh_state_restores_total",
+        "n_state_evictions": "wlsh_state_evictions_total",
+        "n_state_invalidations": "wlsh_state_invalidations_total",
+        "n_state_prefetches": "wlsh_state_prefetches_total",
+        "n_state_prefetch_wasted": "wlsh_state_prefetch_wasted_total",
+        "n_state_restore_overlapped":
+            "wlsh_state_restore_overlapped_total",
+    }
+
+    def __init__(self, metrics: MetricsRegistry, group_id: int):
+        """View over ``metrics`` restricted to ``group_id``'s series."""
+        self._metrics = metrics
+        self._group_id = int(group_id)
+
+    def __getattr__(self, name: str) -> int:
+        """Read the registry counter backing attribute ``name``."""
+        metric = self._COUNTERS.get(name)
+        if metric is None:
+            raise AttributeError(name)
+        return int(
+            self._metrics.counter(metric).value(group=self._group_id)
+        )
 
     @property
     def occupancy(self) -> float:
@@ -371,9 +417,17 @@ class Batcher:
     Group states live in a budgeted ``StateCache``: under
     ``cfg.max_resident_groups`` / ``cfg.device_budget_bytes`` the
     least-recently-used groups are evicted (host-offloaded by default)
-    and transparently restored on their next launch, bit-exactly.  Cache
-    activity is mirrored into the per-group ``stats`` counters and
-    aggregated by ``cache_summary``.
+    and transparently restored on their next launch, bit-exactly.
+
+    Every operational counter lands in one ``obs.MetricsRegistry``
+    (``self.metrics``, shared with the state cache, driver and QoS
+    layers); ``stats``/``cache_summary`` are views over it.  With
+    ``cfg.obs`` enabled the batcher additionally opens per-query
+    ``obs.TraceSpan``s (``self.tracer``) and attributes compiles and
+    dispatch time per shape signature (``self.profiler``) — host-side
+    only, results stay bit-exact.  ``self.clock`` is the injectable
+    time source for span stamps; the async frontend re-binds it to its
+    own clock so ``ManualClock`` replays trace deterministically.
     """
 
     def __init__(
@@ -406,7 +460,18 @@ class Batcher:
                     f"plan c={plan.c} (relaxation must not tighten the "
                     f"approximation ratio)"
                 )
+        self.clock = time.monotonic  # injectable; async frontend re-binds
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(cfg.obs_trace_capacity) if cfg.obs else None
+        self.profiler = Profiler() if cfg.obs else None
+        self._cache_events: list[str] | None = None  # span attribution
         self.step_cache = QueryStepCache()
+        if self.profiler is not None:
+            self.step_cache.on_compile = (
+                lambda c: self.profiler.record_compile(
+                    str(c.shape_signature())
+                )
+            )
         self._group_cfgs: dict[tuple[int, int], IndexConfig] = {}
         self._delta = None  # lazy DeltaIndex, created on first write
         # Paging moves sharded states per shard (each chunk device_put
@@ -428,10 +493,12 @@ class Batcher:
             device_budget_bytes=cfg.device_budget_bytes,
             offload=offload if cfg.offload_evicted else None,
             restore=restore if cfg.offload_evicted else None,
-            on_event=self._on_cache_event,
+            on_event=self._note_cache_event,
+            metrics=self.metrics,
         )
         self.stats: dict[int, GroupServeStats] = {
-            gi: GroupServeStats() for gi in range(plan.n_groups)
+            gi: GroupServeStats(self.metrics, gi)
+            for gi in range(plan.n_groups)
         }
 
     # ------------------------------------------------------------- per group
@@ -529,25 +596,17 @@ class Batcher:
             base_rows=base_rows,
         )
 
-    def _on_cache_event(self, gi: int, kind: str) -> None:
-        """Mirror one StateCache event into the group's serving stats."""
-        st = self.stats[gi]
-        if kind == "hit":
-            st.n_state_hits += 1
-        elif kind == "build":
-            st.n_state_builds += 1
-        elif kind == "restore":
-            st.n_state_restores += 1
-        elif kind == "evict":
-            st.n_state_evictions += 1
-        elif kind == "invalidate":
-            st.n_state_invalidations += 1
-        elif kind == "prefetch":
-            st.n_state_prefetches += 1
-        elif kind == "prefetch_wasted":
-            st.n_state_prefetch_wasted += 1
-        elif kind == "restore_overlapped":
-            st.n_state_restore_overlapped += 1
+    def _note_cache_event(self, gi: int, kind: str) -> None:
+        """Record a StateCache event for trace-span stage attribution.
+
+        Counters live in the shared metrics registry (the StateCache
+        increments them itself — no mirroring); this hook only captures
+        which paging events happened inside the current launch's
+        ``lease`` so its spans can mark their prefetch/restore stage.
+        """
+        events = self._cache_events
+        if events is not None:
+            events.append(kind)
 
     def warmup(self, groups=None) -> None:
         """Build states and compile steps ahead of traffic.
@@ -595,9 +654,14 @@ class Batcher:
         return list(reversed(keep))
 
     def reset_stats(self) -> None:
-        """Zero every per-group counter and the aggregate cache counters."""
-        for gi in self.stats:
-            self.stats[gi] = GroupServeStats()
+        """Zero every per-group counter and the aggregate cache counters.
+
+        Counters and latency histograms under the serving prefixes reset
+        in the registry (the view objects in ``stats`` are unchanged);
+        gauges — current state like resident bytes — are preserved.
+        """
+        self.metrics.reset("wlsh_group_")
+        self.metrics.reset("wlsh_query_")
         self.state_cache.reset_stats()
 
     def stats_summary(self) -> dict[int, dict]:
@@ -692,7 +756,8 @@ class Batcher:
             return pad_cols(g.encode_host(queries), cfg.beta)[take]
         return np.asarray(encode_queries(state, queries[take]))
 
-    def run_batch(self, gi: int, queries, weight_ids, rung: int = 0):
+    def run_batch(self, gi: int, queries, weight_ids, rung: int = 0,
+                  spans=None):
         """One compiled-step launch for 1..q_batch same-group requests.
 
         Pads ragged input by cycling the real rows, encodes the padded
@@ -711,6 +776,12 @@ class Batcher:
         launch: pinned (unevictable) while the compiled step runs, then
         released, so a budgeted cache can page any group between launches
         but never under one.
+
+        ``spans`` is the frontend's per-row ``obs.TraceSpan`` list (one
+        per real row, submission order): paging/launch/merge stages are
+        stamped on them here.  With tracing on and no spans passed (a
+        direct ``run_batch`` caller), spans are opened *and* resolved
+        locally so every query still yields exactly one span.
         """
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         weight_ids = np.atleast_1d(np.asarray(weight_ids, np.int64))
@@ -722,26 +793,63 @@ class Batcher:
         qtake = queries[take]
         wtake = weight_ids[take]
         slots = self.plan.member_slot[wtake]
+        tr = self.tracer
+        own_spans = tr is not None and spans is None
+        if own_spans:
+            t_sub = self.clock()
+            spans = []
+            for wid in weight_ids:
+                s = tr.begin(weight_id=int(wid), group_id=int(gi))
+                s.mark("submit", t_sub)
+                s.mark("route", t_sub)
+                s.mark("queue", t_sub)
+                spans.append(s)
+        if tr is not None:
+            self._cache_events = []
         with self.state_cache.lease(gi) as state:
+            if tr is not None and spans:
+                # attribute this launch's paging work: a consumed
+                # prefetch marks "prefetch", a blocking restore/build
+                # marks "restore" (a plain hit marks neither)
+                t_acq = self.clock()
+                kinds = set(self._cache_events or ())
+                for s in spans:
+                    if "restore_overlapped" in kinds:
+                        s.mark("prefetch", t_acq)
+                    if kinds & {"restore", "build"}:
+                        s.mark("restore", t_acq)
             codes = self._encode(
                 gi, cfg, state, queries, take
             ).astype(np.int32)
-            d_b, i_b, stop_b, chk_b = step(
-                state,
-                jnp.asarray(qtake),
-                jnp.asarray(codes),
-                jnp.asarray(self.plan.weights[wtake].astype(np.float32)),
-                jnp.asarray(g.mu_members[slots].astype(np.int32)),
-                jnp.asarray(g.r_min_members[slots].astype(np.float32)),
-                jnp.asarray(g.beta_members[slots].astype(np.int32)),
-                jnp.asarray(g.n_levels_members[slots].astype(np.int32)),
+            if tr is not None and spans:
+                t_launch = self.clock()
+                for s in spans:
+                    s.mark("launch", t_launch)
+            dispatch_scope = (
+                self.profiler.dispatch(str(cfg.shape_signature()))
+                if self.profiler is not None else _NULL_SCOPE
             )
-            # materialize before releasing the lease: the state must stay
-            # resident until the device has finished reading it
-            ids = np.asarray(i_b)[:real]
-            dists = np.asarray(d_b)[:real]
-            stop = np.asarray(stop_b)[:real]
-            chk = np.asarray(chk_b)[:real]
+            with dispatch_scope:
+                d_b, i_b, stop_b, chk_b = step(
+                    state,
+                    jnp.asarray(qtake),
+                    jnp.asarray(codes),
+                    jnp.asarray(
+                        self.plan.weights[wtake].astype(np.float32)
+                    ),
+                    jnp.asarray(g.mu_members[slots].astype(np.int32)),
+                    jnp.asarray(g.r_min_members[slots].astype(np.float32)),
+                    jnp.asarray(g.beta_members[slots].astype(np.int32)),
+                    jnp.asarray(
+                        g.n_levels_members[slots].astype(np.int32)
+                    ),
+                )
+                # materialize before releasing the lease: the state must
+                # stay resident until the device has finished reading it
+                ids = np.asarray(i_b)[:real]
+                dists = np.asarray(d_b)[:real]
+                stop = np.asarray(stop_b)[:real]
+                chk = np.asarray(chk_b)[:real]
         if cfg.k < self.cfg.k:
             # degraded rung: pad the short top-k back to the strict width
             # (missing-slot conventions, so downstream merge/augment and
@@ -758,10 +866,34 @@ class Batcher:
             ids, dists = self._delta.augment(
                 gi, queries, weight_ids, ids, dists
             )
-        st = self.stats[gi]
-        st.n_batches += 1
-        st.n_queries += real
-        st.n_padded += cfg.q_batch - real
-        st.stop_level_sum += int(np.sum(stop))
-        st.n_checked_sum += int(np.sum(chk))
+        m = self.metrics
+        m.counter("wlsh_group_batches_total",
+                  "compiled-step launches").inc(group=gi)
+        m.counter("wlsh_group_queries_total",
+                  "real rows served").inc(real, group=gi)
+        m.counter("wlsh_group_padded_rows_total",
+                  "padding rows across ragged batches").inc(
+            cfg.q_batch - real, group=gi)
+        m.counter("wlsh_group_stop_levels_total",
+                  "summed histogram stop levels").inc(
+            int(np.sum(stop)), group=gi)
+        m.counter("wlsh_group_checked_total",
+                  "summed candidates verified (n_checked)").inc(
+            int(np.sum(chk)), group=gi)
+        if tr is not None and spans:
+            self._cache_events = None
+            t_merge = self.clock()
+            budget = int(cfg.budget)
+            for i, s in enumerate(spans):
+                s.mark("merge", t_merge)
+                s.group_id = int(gi)
+                s.rung = int(rung)
+                s.n_shards = int(self.mesh.size)
+                s.stop_level = int(stop[i])
+                s.n_checked = int(chk[i])
+                s.budget = budget
+                s.budget_capped = bool(int(chk[i]) >= budget)
+                if own_spans:
+                    s.mark("resolve", t_merge)
+                    tr.finish(s)
         return ids, dists, stop, chk

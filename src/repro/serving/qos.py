@@ -47,6 +47,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from ..obs import MetricsRegistry
+
 __all__ = [
     "DEFAULT_TENANT",
     "DegradeStep",
@@ -278,16 +280,38 @@ class DeficitRoundRobin:
         return selected
 
 
-@dataclasses.dataclass
 class TenantStats:
-    """Per-tenant running counters (one ``QosScheduler`` lifetime)."""
+    """Per-tenant running counters (one ``QosScheduler`` lifetime).
 
-    n_admitted: int = 0
-    n_rate_limited: int = 0
-    n_resolved: int = 0
-    n_slo_misses: int = 0
-    n_degraded: int = 0  # resolved queries answered at rung > 0
-    wait_sum: float = 0.0  # total queued seconds over resolved queries
+    A read-only view over the ``wlsh_tenant_*`` series of the
+    scheduler's registry.  The registry is read through a callable
+    because ``bind_metrics`` re-homes a standalone scheduler's counters
+    onto the serving stack's registry — views handed out before the
+    bind keep reading the live location.
+    """
+
+    # attribute -> registry counter (labeled {tenant=<name>})
+    _COUNTERS = {
+        "n_admitted": "wlsh_tenant_admitted_total",
+        "n_rate_limited": "wlsh_tenant_rate_limited_total",
+        "n_resolved": "wlsh_tenant_resolved_total",
+        "n_slo_misses": "wlsh_tenant_slo_misses_total",
+        "n_degraded": "wlsh_tenant_degraded_total",
+        "wait_sum": "wlsh_tenant_wait_seconds_total",
+    }
+
+    def __init__(self, metrics_fn, tenant: str):
+        """Bind the view: ``metrics_fn()`` returns the live registry."""
+        self._metrics_fn = metrics_fn
+        self._tenant = str(tenant)
+
+    def __getattr__(self, name: str):
+        """Read the registry counter backing attribute ``name``."""
+        metric = type(self)._COUNTERS.get(name)
+        if metric is None:
+            raise AttributeError(name)
+        v = self._metrics_fn().counter(metric).value(tenant=self._tenant)
+        return float(v) if name == "wait_sum" else int(v)
 
     @property
     def slo_miss_rate(self) -> float:
@@ -392,9 +416,29 @@ class QosScheduler:
         self._pressure = False  # expired work deferred on the last poll
         self.n_degrade_steps = 0
         self.n_restore_steps = 0
+        # standalone registry until an AsyncRetrievalService attaches
+        # this scheduler and re-homes the counters (bind_metrics)
+        self.metrics = MetricsRegistry()
         self.stats: dict[str, TenantStats] = {
-            c.name: TenantStats() for c in classes
+            c.name: TenantStats(lambda: self.metrics, c.name)
+            for c in classes
         }
+
+    def bind_metrics(self, registry: MetricsRegistry) -> None:
+        """Re-home the tenant counters onto the serving stack's registry.
+
+        Called when an ``AsyncRetrievalService`` attaches this
+        scheduler: the stack's stale ``wlsh_tenant_*`` series (a
+        previously attached scheduler's) are reset, anything this
+        scheduler counted standalone is merged in, and future
+        increments land in ``registry`` — the ``TenantStats`` views
+        follow automatically through their registry callable.
+        """
+        if registry is self.metrics:
+            return
+        registry.reset("wlsh_tenant_")
+        registry.merge_from(self.metrics)
+        self.metrics = registry
 
     # ------------------------------------------------------------- admission
 
@@ -412,9 +456,14 @@ class QosScheduler:
         cls = self.qos_class(tenant)
         bucket = self._buckets.get(tenant)
         if bucket is not None and not bucket.try_take(now):
-            self.stats[tenant].n_rate_limited += 1
+            self.metrics.counter(
+                "wlsh_tenant_rate_limited_total",
+                "submits rejected by admission control",
+            ).inc(tenant=tenant)
             raise RateLimited(tenant, cls.rate, cls.burst)
-        self.stats[tenant].n_admitted += 1
+        self.metrics.counter(
+            "wlsh_tenant_admitted_total", "admitted submits"
+        ).inc(tenant=tenant)
 
     def deadline_for(
         self, tenant: str, now: float, default_s: float
@@ -518,13 +567,20 @@ class QosScheduler:
         self, tenant: str, wait_s: float, missed: bool, rung: int
     ) -> None:
         """Record one resolved query (called by the service per future)."""
-        st = self.stats[tenant]
-        st.n_resolved += 1
-        st.wait_sum += float(wait_s)
+        m = self.metrics
+        m.counter("wlsh_tenant_resolved_total",
+                  "resolved queries").inc(tenant=tenant)
+        m.counter("wlsh_tenant_wait_seconds_total",
+                  "queued seconds over resolved queries").inc(
+            float(wait_s), tenant=tenant)
         if missed:
-            st.n_slo_misses += 1
+            m.counter("wlsh_tenant_slo_misses_total",
+                      "resolved queries past their deadline").inc(
+                tenant=tenant)
         if rung > 0:
-            st.n_degraded += 1
+            m.counter("wlsh_tenant_degraded_total",
+                      "resolved queries answered at rung > 0").inc(
+                tenant=tenant)
 
     def summary(self) -> dict:
         """Per-tenant summaries plus the controller's transition counts."""

@@ -188,13 +188,32 @@ class RetrievalService:
         if len(weight_ids) != len(queries):
             raise ValueError("queries and weight_ids length mismatch")
         gids = self.batcher.route(weight_ids)
+        tr = self.batcher.tracer
+        spans = None
+        if tr is not None:
+            # one span per submitted query; the whole call is one
+            # synchronous submit/route/queue instant on the clock
+            t_sub = self.batcher.clock()
+            spans = []
+            for wid, gi in zip(weight_ids, gids):
+                s = tr.begin(weight_id=int(wid), group_id=int(gi))
+                s.mark("submit", t_sub)
+                s.mark("route", t_sub)
+                s.mark("queue", t_sub)
+                spans.append(s)
         out_ids, out_d, out_stop, out_chk = run_plans(
             coalesce(gids, self.cfg.q_batch),
             queries,
             weight_ids,
             self.batcher.run_batch,
             self.cfg.k,
+            spans=spans,
         )
+        if tr is not None:
+            t_res = self.batcher.clock()
+            for s in spans:
+                s.mark("resolve", t_res)
+                tr.finish(s)
         return RetrievalResult(
             ids=out_ids,
             dists=out_d,

@@ -66,6 +66,12 @@ __all__ = [
 ]
 
 
+def _fmt_delta(v: float) -> str:
+    """Format a tick-summary counter delta (integral values as ints)."""
+    f = float(v)
+    return str(int(f)) if f.is_integer() else f"{f:.6g}"
+
+
 # ------------------------------------------------------------------ eviction
 
 
@@ -220,7 +226,6 @@ class DeadlinePrefetch(PrefetchPolicy):
 # ------------------------------------------------------------------- driver
 
 
-@dataclasses.dataclass
 class DriverStats:
     """Running driver counters (one ``ServiceDriver`` lifetime).
 
@@ -229,14 +234,32 @@ class DriverStats:
     build) then serializes into that launch's critical path.  Misses are
     accounted before the tick's prefetches run, so a prefetch issued in
     the same tick as the launch does not hide the miss.
+
+    A read-only view over the stack's ``obs.MetricsRegistry``
+    (``wlsh_driver_*`` counters); attaching a fresh driver resets the
+    prefix, so one view spans one driver lifetime.
     """
 
-    n_ticks: int = 0
-    n_launches: int = 0  # batches launched by driver ticks (via poll)
-    n_deadlines_due: int = 0  # group-deadlines found expired at a tick
-    n_deadline_misses: int = 0  # ... of those, state not resident
-    n_prefetches_issued: int = 0  # StateCache.prefetch calls that did work
-    n_idle_compactions: int = 0  # idle ticks that absorbed sealed rows
+    # attribute -> the (unlabeled) registry counter behind it
+    _COUNTERS = {
+        "n_ticks": "wlsh_driver_ticks_total",
+        "n_launches": "wlsh_driver_launches_total",
+        "n_deadlines_due": "wlsh_driver_deadlines_due_total",
+        "n_deadline_misses": "wlsh_driver_deadline_misses_total",
+        "n_prefetches_issued": "wlsh_driver_prefetches_issued_total",
+        "n_idle_compactions": "wlsh_driver_idle_compactions_total",
+    }
+
+    def __init__(self, metrics):
+        """Bind the view to ``metrics`` (the service stack's registry)."""
+        self._metrics = metrics
+
+    def __getattr__(self, name: str) -> int:
+        """Read the registry counter backing attribute ``name``."""
+        metric = type(self)._COUNTERS.get(name)
+        if metric is None:
+            raise AttributeError(name)
+        return int(self._metrics.counter(metric).total())
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -305,7 +328,12 @@ class ServiceDriver:
         self.cache = service.batcher.state_cache
         self.prefetch = prefetch
         self.tick_s = float(tick_s)
-        self.stats = DriverStats()
+        # driver counters live in the stack's unified registry; a fresh
+        # driver over a reused service starts its lifetime at zero
+        self.metrics = service.batcher.metrics
+        self.metrics.reset("wlsh_driver_")
+        self.stats = DriverStats(self.metrics)
+        self._last_snap: dict | None = None  # tick_summary diff baseline
         self._prev_policy = self.cache.eviction_policy
         if eviction is not None:
             self.cache.eviction_policy = eviction
@@ -329,14 +357,19 @@ class ServiceDriver:
         with self._lock:
             if now is None:
                 now = self.svc.clock()
+            m = self.metrics
             pending = self.svc.pending_depths()
             due = []
             for gi, (_, deadline) in pending.items():
                 if deadline <= now:
                     due.append((deadline, gi))
-                    self.stats.n_deadlines_due += 1
+                    m.counter("wlsh_driver_deadlines_due_total",
+                              "group-deadlines found expired").inc()
                     if not self.cache.is_resident(gi):
-                        self.stats.n_deadline_misses += 1
+                        m.counter(
+                            "wlsh_driver_deadline_misses_total",
+                            "expired deadlines with state off-device",
+                        ).inc()
             if self.prefetch is not None:
                 order, shield = self.prefetch.plan(
                     pending, self.svc.batcher.cfg.q_batch, now,
@@ -350,17 +383,23 @@ class ServiceDriver:
                 self.cache.protect(shield & kept)
                 for gi in order:
                     if gi in kept and self.cache.prefetch(gi):
-                        self.stats.n_prefetches_issued += 1
+                        m.counter(
+                            "wlsh_driver_prefetches_issued_total",
+                            "prefetch calls that issued paging work",
+                        ).inc()
             n = self.svc.poll(now)
-            self.stats.n_launches += n
+            m.counter("wlsh_driver_launches_total",
+                      "batches launched by driver ticks").inc(n)
             if self.svc.qos is not None:
                 # close the tick for degradation hysteresis: sustained
                 # deferral pressure steps degradable tenants down the
                 # (c, k) ladder; sustained clear ticks step them back up
                 self.svc.qos.observe_tick()
             if n == 0 and self.svc.idle_work():
-                self.stats.n_idle_compactions += 1
-            self.stats.n_ticks += 1
+                m.counter("wlsh_driver_idle_compactions_total",
+                          "idle ticks that absorbed sealed rows").inc()
+            m.counter("wlsh_driver_ticks_total",
+                      "scheduler ticks").inc()
             return n
 
     def _clamp_to_budget(self, priority: list[int]) -> set[int]:
@@ -388,6 +427,24 @@ class ServiceDriver:
             kept.add(gi)
             nbytes += nb
         return kept
+
+    def tick_summary(self) -> str:
+        """One-line counter movement since the previous summary call.
+
+        Built from ``MetricsRegistry.diff`` against the snapshot the
+        last call took — the driver's human-readable heartbeat (the
+        launcher prints it after a driven replay).
+        """
+        diff = self.metrics.diff(self._last_snap)
+        self._last_snap = self.metrics.snapshot()
+        if not diff:
+            return "driver: idle (no counter movement)"
+        parts = []
+        for name in sorted(diff):
+            total = sum(diff[name].values())
+            short = name.removeprefix("wlsh_").removesuffix("_total")
+            parts.append(f"{short}=+{_fmt_delta(total)}")
+        return "driver: " + " ".join(parts)
 
     def submit(self, query, weight_id, deadline: float | None = None,
                tenant: str | None = None) -> QueryFuture:

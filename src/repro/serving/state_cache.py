@@ -53,8 +53,11 @@ miss timings feed a ``RestoreCostModel`` (EWMA bytes/s) that prices
 
 Byte accounting comes from ``IndexConfig.state_nbytes`` (the *padded*
 shapes actually materialized), so budgets are enforceable before any state
-is built.  Counters (hits / builds / restores / evictions) feed
-``Batcher.stats`` and the serve_bench paging sweep.  Compiled query steps
+is built.  Counters (hits / builds / restores / evictions) are recorded
+directly in the serving stack's unified ``MetricsRegistry`` as
+``wlsh_state_*`` series labeled by group — ``CacheStats`` (and the
+per-group ``Batcher.stats`` views) read the same series, so nothing is
+mirrored.  Compiled query steps
 are deliberately *not* managed here: ``QueryStepCache`` keys on shape
 signatures, so evicting a group's state never forces a recompile.
 
@@ -71,12 +74,26 @@ import time
 from collections import OrderedDict
 from typing import Callable
 
+from ..obs import MetricsRegistry
+
 __all__ = [
     "CacheStats",
     "EvictionCandidate",
     "RestoreCostModel",
     "StateCache",
 ]
+
+# Cache event kind -> unified registry counter (labeled by group).
+_EVENT_COUNTERS = {
+    "hit": "wlsh_state_hits_total",
+    "build": "wlsh_state_builds_total",
+    "restore": "wlsh_state_restores_total",
+    "evict": "wlsh_state_evictions_total",
+    "invalidate": "wlsh_state_invalidations_total",
+    "prefetch": "wlsh_state_prefetches_total",
+    "prefetch_wasted": "wlsh_state_prefetch_wasted_total",
+    "restore_overlapped": "wlsh_state_restore_overlapped_total",
+}
 
 
 class RestoreCostModel:
@@ -132,25 +149,48 @@ class RestoreCostModel:
         return max(nbytes, 0) / self._bytes_per_s
 
 
-@dataclasses.dataclass
 class CacheStats:
-    """Running cache counters (reset with ``StateCache.reset_stats``)."""
+    """Cache counters as a read-only view over the unified registry.
 
-    n_hits: int = 0  # acquire found the state resident
-    n_builds: int = 0  # cold miss: state built from scratch (incl. prefetch)
-    n_restores: int = 0  # warm miss: host copy uploaded (incl. prefetch)
-    n_evictions: int = 0  # device evictions (offloaded or discarded)
-    n_invalidations: int = 0  # version bumps (compaction replace/invalidate)
-    n_prefetches: int = 0  # prefetch calls that issued a restore or build
-    n_prefetch_wasted: int = 0  # prefetched states evicted before any acquire
-    n_restore_overlapped: int = 0  # prefetch restores later consumed by an
-    # acquire: the upload overlapped other work instead of blocking a launch
-    n_restore_retries: int = 0  # failed restore/build attempts that were
-    # retried (bounded by StateCache.restore_retries per miss)
-    resident_bytes: int = 0  # current accounted residency (not a counter:
-    # kept in sync by the cache, survives reset_stats)
-    device_budget_bytes: int | None = None  # the cache's byte budget, for
-    # the derived utilization (None = unbudgeted)
+    Every count lives in the serving stack's :class:`MetricsRegistry`
+    (``wlsh_state_*`` counters labeled by group, plus the
+    ``wlsh_state_resident_bytes`` gauge); this class is a thin summing
+    view so callers keep the classic ``stats.n_hits`` spelling.  Reset
+    with ``StateCache.reset_stats`` (residency and budget survive).
+    """
+
+    # attribute -> registry counter it sums over (all group labels)
+    _COUNTERS = {
+        "n_hits": "wlsh_state_hits_total",
+        "n_builds": "wlsh_state_builds_total",
+        "n_restores": "wlsh_state_restores_total",
+        "n_evictions": "wlsh_state_evictions_total",
+        "n_invalidations": "wlsh_state_invalidations_total",
+        "n_prefetches": "wlsh_state_prefetches_total",
+        "n_prefetch_wasted": "wlsh_state_prefetch_wasted_total",
+        "n_restore_overlapped": "wlsh_state_restore_overlapped_total",
+        "n_restore_retries": "wlsh_state_restore_retries_total",
+    }
+
+    def __init__(self, metrics: MetricsRegistry,
+                 device_budget_bytes: int | None = None):
+        """Bind the view to ``metrics`` (see ``StateCache.metrics``)."""
+        self._metrics = metrics
+        self.device_budget_bytes = device_budget_bytes
+
+    def __getattr__(self, name: str) -> int:
+        """Resolve ``n_*`` counter reads against the registry."""
+        metric = type(self)._COUNTERS.get(name)
+        if metric is None:
+            raise AttributeError(name)
+        return int(self._metrics.counter(metric).total())
+
+    @property
+    def resident_bytes(self) -> int:
+        """Current accounted residency (gauge: survives reset_stats)."""
+        return int(
+            self._metrics.gauge("wlsh_state_resident_bytes").value()
+        )
 
     @property
     def n_misses(self) -> int:
@@ -251,7 +291,8 @@ class StateCache:
         Optional ``on_event(group_id, kind)`` observer with kind in
         ``{"hit", "build", "restore", "evict", "invalidate", "prefetch",
         "prefetch_wasted", "restore_overlapped"}`` — the hook ``Batcher``
-        uses to mirror cache activity into its per-group serving stats.
+        uses to attribute cache activity to in-flight trace spans (the
+        counters themselves live in the shared registry, no mirroring).
     eviction_policy:
         Optional victim selector ``policy(candidates) -> group_id`` over
         a tuple of ``EvictionCandidate`` (every unpinned, unprotected
@@ -272,6 +313,16 @@ class StateCache:
     cost_model:
         The learned restore-bandwidth model fed by observed miss
         timings (``RestoreCostModel``); None installs a default one.
+    metrics:
+        The unified ``MetricsRegistry`` the cache's ``wlsh_state_*``
+        counters and residency gauge live in — ``Batcher`` passes its
+        own so every layer shares one registry; None creates a private
+        one (standalone caches stay self-contained).
+    timer:
+        Injectable clock for restore/build timing (feeds the
+        ``RestoreCostModel``); defaults to ``time.perf_counter``.
+    sleep:
+        Injectable retry-backoff sleep; defaults to ``time.sleep``.
     """
 
     def __init__(
@@ -288,6 +339,9 @@ class StateCache:
         restore_retries: int = 2,
         retry_backoff_s: float = 0.0,
         cost_model: RestoreCostModel | None = None,
+        metrics: MetricsRegistry | None = None,
+        timer: Callable[[], float] = time.perf_counter,
+        sleep: Callable[[float], None] | None = None,
     ):
         if max_resident_groups is not None and max_resident_groups < 1:
             raise ValueError(
@@ -311,7 +365,8 @@ class StateCache:
             )
         self.restore_retries = int(restore_retries)
         self.retry_backoff_s = float(retry_backoff_s)
-        self._sleep = time.sleep
+        self._sleep = sleep if sleep is not None else time.sleep
+        self._timer = timer
         self.cost_model = (
             cost_model if cost_model is not None else RestoreCostModel()
         )
@@ -334,7 +389,17 @@ class StateCache:
         self._versions: dict[int, int] = {}
         self._protected: frozenset[int] = frozenset()
         self._tick = 0  # monotone access counter for recency scoring
-        self.stats = CacheStats(device_budget_bytes=device_budget_bytes)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = CacheStats(
+            self.metrics, device_budget_bytes=device_budget_bytes
+        )
+
+    def _event(self, gi: int, kind: str) -> None:
+        """Count one cache event in the registry and notify the hook."""
+        self.metrics.counter(
+            _EVENT_COUNTERS[kind], "state-cache events by kind"
+        ).inc(group=gi)
+        self._on_event(gi, kind)
 
     # ------------------------------------------------------------- inspection
 
@@ -392,16 +457,20 @@ class StateCache:
         return self._protected
 
     def reset_stats(self) -> None:
-        """Zero the counters (current residency/budget figures survive)."""
-        self.stats = CacheStats(
-            resident_bytes=self._resident_nbytes,
-            device_budget_bytes=self.device_budget_bytes,
-        )
+        """Zero the counters (current residency/budget figures survive).
+
+        Registry gauges survive ``reset`` by design, so the residency
+        figure carries across while every ``wlsh_state_*`` counter
+        starts over.
+        """
+        self.metrics.reset("wlsh_state_")
 
     def _add_bytes(self, delta: int) -> None:
-        """Adjust the accounted residency (mirrored into the stats)."""
+        """Adjust the accounted residency (mirrored into the gauge)."""
         self._resident_nbytes += delta
-        self.stats.resident_bytes = self._resident_nbytes
+        self.metrics.gauge(
+            "wlsh_state_resident_bytes", "accounted resident state bytes"
+        ).set(self._resident_nbytes)
 
     def _touch(self, entry: _Entry) -> None:
         """Stamp ``entry`` with the next monotone access tick."""
@@ -426,14 +495,12 @@ class StateCache:
             self._resident.move_to_end(gi)
             self._touch(entry)
             entry.pins += 1
-            self.stats.n_hits += 1
-            self._on_event(gi, "hit")
+            self._event(gi, "hit")
             if entry.prefetched is not None:
                 # the prefetch paid off: the upload happened before this
                 # acquire needed it, off the launch's critical path
                 if entry.prefetched == "restore":
-                    self.stats.n_restore_overlapped += 1
-                    self._on_event(gi, "restore_overlapped")
+                    self._event(gi, "restore_overlapped")
                 entry.prefetched = None
             return entry.state
         entry, _ = self._materialize(gi)
@@ -465,19 +532,17 @@ class StateCache:
             )
             del self._offloaded[gi]
             entry.host = None
-            self.stats.n_restores += 1
             kind = "restore"
         else:
             entry = _Entry(
                 state=self._attempt(lambda: self._build(gi), nbytes),
                 nbytes=nbytes, version=version,
             )
-            self.stats.n_builds += 1
             kind = "build"
         self._resident[gi] = entry  # newest LRU position
         self._touch(entry)
         self._add_bytes(entry.nbytes)
-        self._on_event(gi, kind)
+        self._event(gi, kind)
         entry.prefetched = None
         return entry, kind
 
@@ -491,18 +556,21 @@ class StateCache:
         feed their observed transfer time to the ``RestoreCostModel``.
         """
         for attempt in range(self.restore_retries + 1):
-            t0 = time.perf_counter()
+            t0 = self._timer()
             try:
                 state = run()
             except Exception:
                 if attempt >= self.restore_retries:
                     raise
-                self.stats.n_restore_retries += 1
+                self.metrics.counter(
+                    "wlsh_state_restore_retries_total",
+                    "failed restore/build attempts that were retried",
+                ).inc()
                 backoff = self.retry_backoff_s * (2 ** attempt)
                 if backoff > 0:
                     self._sleep(backoff)
                 continue
-            self.cost_model.observe(nbytes, time.perf_counter() - t0)
+            self.cost_model.observe(nbytes, self._timer() - t0)
             return state
 
     def release(self, gi: int) -> None:
@@ -554,14 +622,11 @@ class StateCache:
             entry, kind = self._materialize(gi)
         except Exception:
             # speculative work only: swallow, count, let acquire retry
-            self.stats.n_prefetches += 1
-            self._on_event(gi, "prefetch")
-            self.stats.n_prefetch_wasted += 1
-            self._on_event(gi, "prefetch_wasted")
+            self._event(gi, "prefetch")
+            self._event(gi, "prefetch_wasted")
             return False
         entry.prefetched = kind
-        self.stats.n_prefetches += 1
-        self._on_event(gi, "prefetch")
+        self._event(gi, "prefetch")
         return True
 
     def protect(self, group_ids) -> None:
@@ -643,15 +708,13 @@ class StateCache:
             self._offloaded[gi] = entry
         entry.state = None  # drop the device reference either way
         self._mark_wasted_prefetch(gi, entry)
-        self.stats.n_evictions += 1
-        self._on_event(gi, "evict")
+        self._event(gi, "evict")
 
     def _mark_wasted_prefetch(self, gi: int, entry: _Entry) -> None:
         """Count a prefetched state that left the device unconsumed."""
         if entry.prefetched is not None:
             entry.prefetched = None
-            self.stats.n_prefetch_wasted += 1
-            self._on_event(gi, "prefetch_wasted")
+            self._event(gi, "prefetch_wasted")
 
     def clear(self) -> None:
         """Drop every unpinned resident state (keeping host copies)."""
@@ -681,8 +744,7 @@ class StateCache:
             self._mark_wasted_prefetch(gi, entry)
         self._offloaded.pop(gi, None)
         self._versions[gi] = self.version_of(gi) + 1
-        self.stats.n_invalidations += 1
-        self._on_event(gi, "invalidate")
+        self._event(gi, "invalidate")
 
     def replace(self, gi: int, state: object, nbytes: int | None = None
                 ) -> None:
@@ -718,6 +780,5 @@ class StateCache:
         entry.host = None
         self._resident.move_to_end(gi)
         self._touch(entry)
-        self.stats.n_invalidations += 1
-        self._on_event(gi, "invalidate")
+        self._event(gi, "invalidate")
         self._enforce_budget()

@@ -43,6 +43,10 @@ DOCSTRING_SCOPE = [
     "src/repro/core/serving_plan.py",
     "src/repro/index/streaming.py",
     "src/repro/distributed/group_sharding.py",
+    "src/repro/obs/__init__.py",
+    "src/repro/obs/metrics.py",
+    "src/repro/obs/trace.py",
+    "src/repro/obs/profile.py",
 ]
 
 # quickstart smoke: same flags as documented, shrunk to a tiny corpus
@@ -180,7 +184,12 @@ def test_docs_cross_links():
                    "qos.py", "QosScheduler", "QosClass",
                    "DeficitRoundRobin", "TokenBucket", "DegradeStep",
                    "degrade_ladder", "RateLimited", "capacity_per_tick",
-                   "degrade_after"):
+                   "degrade_after",
+                   "obs/metrics.py", "obs/trace.py", "obs/profile.py",
+                   "MetricsRegistry", "TraceSpan", "Tracer", "Profiler",
+                   "--trace-out", "--metrics-out", "--profile-dir",
+                   "wlsh_group_queries_total", "wlsh_query_wait_seconds",
+                   "tick_summary"):
         assert anchor in arch, f"ARCHITECTURE.md lost its {anchor} coverage"
 
 

@@ -1,0 +1,452 @@
+"""Observability layer: trace spans, unified metrics registry, profiling.
+
+Pinned claims:
+
+* the fixed-bucket histogram's interpolated percentiles track a numpy
+  oracle to within one bucket width (deterministic and as a hypothesis
+  property), without storing samples;
+* the registry's exposition surfaces round-trip — Prometheus text
+  parses back to the recorded values and the JSON snapshot is the
+  ``snapshot()`` dict verbatim — and ``diff`` reports exactly the
+  counter deltas;
+* the registry is thread-safe: racing increments lose nothing, and a
+  thread-mode ``ServiceDriver`` writing metrics while the main thread
+  snapshots never corrupts a total;
+* every query served with the obs layer on yields exactly one finished
+  ``TraceSpan`` with monotone stage timestamps whose ``n_checked`` /
+  ``stop_level`` match the engine's returned values, across the sync,
+  async and paged frontends;
+* spans survive a JSONL export/load round trip;
+* turning the obs layer on changes no answer — ids, dists, stop levels
+  and n_checked are bit-exact vs the obs-off service per p in
+  {2, 1, 0.5}.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.obs import MetricsRegistry, STAGES, TraceSpan, Tracer
+from repro.serving import (
+    AsyncRetrievalService,
+    ManualClock,
+    RetrievalService,
+    ServiceConfig,
+    ServiceDriver,
+    replay_open_loop,
+)
+from repro.serving.qos import QosClass, QosScheduler
+
+K = 5
+Q_BATCH = 4
+
+
+def _mixed_queries(data, weights, n_queries, seed=43):
+    rng = np.random.default_rng(seed)
+    wids = rng.integers(0, len(weights), n_queries)
+    qpts = data[rng.choice(len(data), n_queries, replace=False)].astype(
+        np.float32
+    )
+    qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+    return qpts, wids
+
+
+def _obs_service(plan, data, **cfg_kw):
+    svc = RetrievalService(
+        plan, data,
+        cfg=ServiceConfig(k=K, q_batch=Q_BATCH, obs=True, **cfg_kw),
+    )
+    svc.warmup()
+    return svc
+
+
+# ------------------------------------------------------------ metrics registry
+
+
+def test_counter_labels_totals_and_series():
+    reg = MetricsRegistry()
+    c = reg.counter("wlsh_test_total", "help text")
+    c.inc(group=0)
+    c.inc(3, group=1)
+    c.inc(group=1)
+    assert c.value(group=0) == 1
+    assert c.value(group=1) == 4
+    assert c.value(group=9) == 0  # unseen series reads 0
+    assert c.total() == 5
+    assert reg.counter("wlsh_test_total") is c  # get-or-create
+
+
+def test_counter_rejects_negative_and_kind_conflicts():
+    reg = MetricsRegistry()
+    reg.counter("wlsh_x_total")
+    with pytest.raises(ValueError, match="cannot decrease"):
+        reg.counter("wlsh_x_total").inc(-1)
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("wlsh_x_total")
+
+
+def test_gauge_set_add_and_survives_reset():
+    reg = MetricsRegistry()
+    g = reg.gauge("wlsh_resident_bytes")
+    g.set(100.0)
+    g.add(-25.0)  # gauges may decrease
+    assert g.value() == 75.0
+    reg.counter("wlsh_y_total").inc(7)
+    reg.reset("wlsh_")
+    assert reg.counter("wlsh_y_total").total() == 0
+    assert g.value() == 75.0  # gauges describe state, not activity
+
+
+def test_histogram_percentiles_match_numpy_oracle():
+    buckets = tuple(np.linspace(0.05, 1.0, 20))  # width 0.05
+    reg = MetricsRegistry()
+    h = reg.histogram("wlsh_t_seconds", buckets=buckets)
+    rng = np.random.default_rng(5)
+    xs = rng.uniform(0.0, 1.0, 2_000)
+    for x in xs:
+        h.observe(float(x))
+    assert h.count() == len(xs)
+    assert h.sum() == pytest.approx(float(xs.sum()), rel=1e-9)
+    for q in (0.0, 10.0, 50.0, 95.0, 99.0, 100.0):
+        got = h.percentile(q)
+        want = float(np.percentile(xs, q))
+        assert abs(got - want) <= 0.05 + 1e-9, (q, got, want)
+
+
+@settings(max_examples=50)
+@given(
+    xs=st.lists(st.floats(min_value=1e-6, max_value=9.0,
+                          allow_nan=False), min_size=1, max_size=200),
+    qs=st.lists(st.floats(min_value=0.0, max_value=100.0),
+                min_size=2, max_size=6),
+)
+def test_histogram_percentile_bounded_and_monotone(xs, qs):
+    h = MetricsRegistry().histogram(
+        "wlsh_p_seconds", buckets=tuple(np.linspace(0.5, 10.0, 20)),
+    )
+    for x in xs:
+        h.observe(x)
+    ests = [h.percentile(q) for q in sorted(qs)]
+    for est in ests:  # clamped to the observed range
+        assert min(xs) - 1e-12 <= est <= max(xs) + 1e-12
+    for lo, hi in zip(ests, ests[1:]):  # monotone in q
+        assert lo <= hi + 1e-12
+
+
+def test_histogram_empty_and_bad_args():
+    reg = MetricsRegistry()
+    h = reg.histogram("wlsh_e_seconds")
+    assert np.isnan(h.percentile(50.0))
+    with pytest.raises(ValueError, match=r"\[0, 100\]"):
+        h.percentile(101.0)
+    with pytest.raises(ValueError, match="ascending"):
+        reg.histogram("wlsh_bad_seconds", buckets=(2.0, 1.0))
+
+
+def _parse_exposition(text):
+    """``{name: {labelstr_or_'': value}}`` from Prometheus text lines."""
+    out: dict = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        lhs, val = line.rsplit(" ", 1)
+        if "{" in lhs:
+            name, rest = lhs.split("{", 1)
+            key = rest.rstrip("}")
+        else:
+            name, key = lhs, ""
+        out.setdefault(name, {})[key] = float(val)
+    return out
+
+
+def test_text_exposition_parses_back_to_recorded_values():
+    reg = MetricsRegistry()
+    reg.counter("wlsh_q_total", "queries").inc(3, group=0)
+    reg.counter("wlsh_q_total").inc(5, group=1)
+    reg.gauge("wlsh_res_bytes", "resident").set(42.0)
+    h = reg.histogram("wlsh_w_seconds", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    text = reg.to_text()
+    assert "# HELP wlsh_q_total queries" in text
+    assert "# TYPE wlsh_w_seconds histogram" in text
+    parsed = _parse_exposition(text)
+    assert parsed["wlsh_q_total"]['group="0"'] == 3
+    assert parsed["wlsh_q_total"]['group="1"'] == 5
+    assert parsed["wlsh_res_bytes"][""] == 42.0
+    # cumulative buckets: non-decreasing, +Inf equals _count
+    # (integral edges exposition-format as ints: le="1", not le="1.0")
+    bkt = parsed["wlsh_w_seconds_bucket"]
+    cum = [bkt['le="0.1"'], bkt['le="1"'], bkt['le="10"'],
+           bkt['le="+Inf"']]
+    assert cum == sorted(cum)
+    assert cum == [1, 3, 4, 4]
+    assert parsed["wlsh_w_seconds_count"][""] == 4
+    assert parsed["wlsh_w_seconds_sum"][""] == pytest.approx(6.05)
+
+
+def test_json_snapshot_round_trip_and_diff():
+    reg = MetricsRegistry()
+    reg.counter("wlsh_a_total").inc(2, group=0)
+    reg.gauge("wlsh_b").set(9.0)
+    reg.histogram("wlsh_c_seconds").observe(0.2)
+    assert json.loads(reg.to_json()) == reg.snapshot()
+    before = reg.snapshot()
+    reg.counter("wlsh_a_total").inc(3, group=0)
+    reg.counter("wlsh_a_total").inc(group=1)
+    reg.gauge("wlsh_b").set(1.0)  # non-counters never appear in a diff
+    d = reg.diff(before)
+    assert d == {"wlsh_a_total": {"group=0": 3, "group=1": 1}}
+    assert reg.diff(reg.snapshot()) == {}  # zero deltas dropped
+    assert reg.diff(None) == {"wlsh_a_total": {"group=0": 5, "group=1": 1}}
+
+
+def test_merge_from_sums_counters():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("wlsh_m_total").inc(2, tenant="x")
+    b.counter("wlsh_m_total").inc(5, tenant="x")
+    b.counter("wlsh_n_total").inc(1)
+    a.merge_from(b)
+    assert a.counter("wlsh_m_total").value(tenant="x") == 7
+    assert a.counter("wlsh_n_total").total() == 1
+
+
+def test_registry_thread_safety_racing_increments():
+    reg = MetricsRegistry()
+    c = reg.counter("wlsh_race_total")
+    h = reg.histogram("wlsh_race_seconds")
+    n_threads, n_incs = 8, 2_000
+    stop = threading.Event()
+
+    def writer(tid):
+        for i in range(n_incs):
+            c.inc(thread=tid % 2)
+            h.observe(1e-3 * (i % 7 + 1))
+
+    def reader():
+        while not stop.is_set():  # snapshots must never see torn state
+            snap = reg.snapshot()
+            total = sum(snap["wlsh_race_total"]["series"].values())
+            assert 0 <= total <= n_threads * n_incs
+            reg.to_text()
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    rt = threading.Thread(target=reader)
+    rt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rt.join()
+    assert c.total() == n_threads * n_incs
+    assert c.value(thread=0) == c.value(thread=1) == c.total() // 2
+    assert h.count() == n_threads * n_incs
+
+
+# ------------------------------------------------------------------ trace spans
+
+
+def test_span_rejects_unknown_stage_and_tracks_monotone():
+    span = TraceSpan(0)
+    with pytest.raises(ValueError, match="unknown trace stage"):
+        span.mark("teleport", 1.0)
+    span.mark("submit", 1.0)
+    span.mark("launch", 2.0)
+    assert span.monotone
+    span.mark("resolve", 1.5)  # before launch: out of order
+    assert not span.monotone
+    span.mark("resolve", 2.0)  # re-marking overwrites
+    assert span.monotone
+    assert span.duration_s == 1.0
+
+
+@settings(max_examples=50)
+@given(
+    steps=st.lists(
+        st.floats(min_value=-1.0, max_value=1.0, allow_nan=False),
+        min_size=2, max_size=len(STAGES),
+    )
+)
+def test_span_monotone_iff_stage_times_sorted(steps):
+    span = TraceSpan(0)
+    times = list(np.cumsum(steps))
+    for stage, t in zip(STAGES, times):
+        span.mark(stage, t)
+    assert span.monotone == (times == sorted(times))
+
+
+def test_tracer_ring_retention_and_exact_totals():
+    tr = Tracer(capacity=4)
+    for _ in range(10):
+        tr.finish(tr.begin())
+    kept = tr.spans()
+    assert [s.query_id for s in kept] == [6, 7, 8, 9]  # oldest dropped
+    assert tr.n_started == tr.n_finished == 10
+    with pytest.raises(ValueError, match=">= 1"):
+        Tracer(capacity=0)
+
+
+def test_jsonl_export_round_trip(tmp_path):
+    tr = Tracer()
+    s = tr.begin(weight_id=3, group_id=1, tenant="gold")
+    for i, stage in enumerate(STAGES):
+        s.mark(stage, 10.0 + i)
+    s.rung, s.n_shards, s.cause = 2, 4, "deadline"
+    s.stop_level, s.n_checked = 7, 105
+    s.budget, s.budget_capped = 105, True
+    tr.finish(s)
+    tr.finish(tr.begin())  # a second, mostly-default span
+    path = tmp_path / "spans.jsonl"
+    assert tr.export_jsonl(path) == 2
+    back = Tracer.load_jsonl(path)
+    assert [b.to_dict() for b in back] == [x.to_dict() for x in tr.spans()]
+
+
+# ----------------------------------------------------- spans through the stack
+
+
+def test_sync_service_emits_one_exact_span_per_query(parity_setup):
+    p, data, weights, host, plan, _ = parity_setup
+    svc = _obs_service(plan, data)
+    qpts, wids = _mixed_queries(data, weights, 14, seed=51)
+    res = svc.query(qpts, wids)
+    tr = svc.batcher.tracer
+    spans = tr.spans()
+    assert tr.n_started == tr.n_finished == len(qpts)
+    assert [s.query_id for s in spans] == list(range(len(qpts)))
+    for qi, s in enumerate(spans):
+        assert s.monotone
+        assert {"submit", "route", "queue", "launch", "merge",
+                "resolve"} <= set(s.stages)
+        assert s.weight_id == int(wids[qi])
+        assert s.group_id == int(res.group_ids[qi])
+        assert s.n_checked == int(res.n_checked[qi])  # engine's own value
+        assert s.stop_level == int(res.stop_levels[qi])
+        assert s.budget >= s.n_checked > 0
+    # profiler attribution covered the launches
+    prof = svc.batcher.profiler.summary()
+    assert prof["n_compiles"] >= 1
+    n_batches = svc.batcher.metrics.counter(
+        "wlsh_group_batches_total"
+    ).total()
+    assert sum(d["count"] for d in prof["dispatch"].values()) == n_batches
+
+
+def test_async_service_spans_carry_cause_and_wait_histogram(parity_setup):
+    p, data, weights, host, plan, _ = parity_setup
+    svc = _obs_service(plan, data)
+    asvc = AsyncRetrievalService(svc, max_delay_ms=2.0,
+                                 clock=ManualClock())
+    qpts, wids = _mixed_queries(data, weights, 16, seed=52)
+    rng = np.random.default_rng(6)
+    arrivals = np.cumsum(rng.exponential(1 / 2_000.0, len(qpts)))
+    replay_open_loop(asvc, qpts, wids, arrivals)
+    tr = svc.batcher.tracer
+    assert tr.n_started == tr.n_finished == len(qpts)
+    for s in tr.spans():
+        assert s.monotone
+        assert s.cause in ("full", "deadline", "drain")
+        assert s.stages["resolve"] >= s.stages["submit"]
+    wait_h = svc.batcher.metrics.histogram("wlsh_query_wait_seconds")
+    assert wait_h.count() == len(qpts)
+
+
+def test_qos_admitted_spans_mark_admit_and_tenant(parity_setup):
+    p, data, weights, host, plan, _ = parity_setup
+    svc = _obs_service(plan, data)
+    qos = QosScheduler(classes=[QosClass("gold", weight=1.0,
+                                         slo_ms=50.0)])
+    asvc = AsyncRetrievalService(svc, max_delay_ms=1.0,
+                                 clock=ManualClock(), qos=qos)
+    qpts, wids = _mixed_queries(data, weights, 6, seed=53)
+    futs = [asvc.submit(qpts[i], wids[i], tenant="gold")
+            for i in range(len(qpts))]
+    asvc.drain()
+    assert all(f.done() for f in futs)
+    spans = svc.batcher.tracer.spans()
+    assert len(spans) == len(qpts)
+    for s in spans:
+        assert s.tenant == "gold"
+        assert "admit" in s.stages
+        assert s.monotone
+
+
+def test_paged_spans_record_restores(parity_setup):
+    p, data, weights, host, plan, _ = parity_setup
+    svc = _obs_service(plan, data, max_resident_groups=1)
+    qpts, wids = _mixed_queries(data, weights, 16, seed=54)
+    svc.query(qpts, wids)
+    spans = svc.batcher.tracer.spans()
+    assert len(spans) == len(qpts)
+    assert all(s.monotone for s in spans)
+    # cap 1 over >= 3 groups: most launches fault their state back in,
+    # and the restore stamp can never precede the launch stamp's floor
+    restored = [s for s in spans if "restore" in s.stages]
+    assert restored
+    for s in restored:
+        assert s.stages["restore"] <= s.stages["launch"]
+    n_restores = svc.batcher.metrics.counter(
+        "wlsh_state_restores_total"
+    ).total()
+    builds = svc.batcher.metrics.counter(
+        "wlsh_state_builds_total"
+    ).total()
+    assert n_restores + builds > 0
+
+
+def test_thread_mode_driver_metrics_stay_exact(parity_setup):
+    """Driver thread writes the registry while the main thread snapshots;
+    totals must come out exact and every query must get its span."""
+    p, data, weights, host, plan, _ = parity_setup
+    svc = _obs_service(plan, data, max_resident_groups=1)
+    asvc = AsyncRetrievalService(svc.batcher, max_delay_ms=0.5)
+    driver = ServiceDriver(asvc, tick_s=0.001)
+    driver.start()
+    qpts, wids = _mixed_queries(data, weights, 8, seed=55)
+    futs = []
+    for i in range(len(qpts)):
+        futs.append(driver.submit(qpts[i], wids[i]))
+        svc.batcher.metrics.snapshot()  # concurrent reads must be safe
+        svc.batcher.metrics.to_text()
+    driver.stop(drain=True)
+    assert all(f.done() for f in futs)
+    reg = svc.batcher.metrics
+    assert reg.counter("wlsh_group_queries_total").total() == len(qpts)
+    tr = svc.batcher.tracer
+    assert tr.n_started == tr.n_finished == len(qpts)
+    sync = svc.query(qpts, wids)  # thread-mode answers stay bit-exact
+    got = np.stack([f.result().ids for f in futs])
+    np.testing.assert_array_equal(got, sync.ids)
+
+
+# ------------------------------------------------------------- bit-exactness
+
+
+def test_obs_on_is_bit_exact_sync_async_paged(parity_setup):
+    p, data, weights, host, plan, svc_off = parity_setup
+    qpts, wids = _mixed_queries(data, weights, 24, seed=57)
+    ref = svc_off.query(qpts, wids)  # the obs-off reference answers
+
+    def _assert_same(res):
+        np.testing.assert_array_equal(res.ids, ref.ids)
+        np.testing.assert_array_equal(res.dists, ref.dists)
+        np.testing.assert_array_equal(res.stop_levels, ref.stop_levels)
+        np.testing.assert_array_equal(res.n_checked, ref.n_checked)
+
+    _assert_same(_obs_service(plan, data).query(qpts, wids))
+    _assert_same(
+        _obs_service(plan, data, max_resident_groups=1).query(qpts, wids)
+    )
+    asvc = AsyncRetrievalService(_obs_service(plan, data),
+                                 max_delay_ms=2.0, clock=ManualClock())
+    rng = np.random.default_rng(8)
+    arrivals = np.cumsum(rng.exponential(1 / 2_000.0, len(qpts)))
+    res, _ = replay_open_loop(asvc, qpts, wids, arrivals)
+    _assert_same(res)
