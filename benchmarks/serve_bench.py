@@ -57,6 +57,15 @@ pins a baseline for that path:
            layer off vs fully on (trace spans + profiler over the
            always-on metrics registry) — answers must stay bit-exact and
            the p50 per-launch driver-step time may pay < 5% overhead
+  sweep 10 online recall telemetry: the sweep-8 degradation-on overload
+           trace replayed with shadow-exact recall sampling off vs on at
+           rate 1.0 — every served answer is re-ranked off-path against
+           the exact host oracle (driver idle ticks drain the shadow
+           queue).  Sampling must not move a single served bit, the
+           online micro-averaged estimate must equal an offline oracle
+           recomputation on the same sample bit-for-bit, and the
+           per-rung observed recall must hold at or above the rung's
+           planned bound (strict rung: the configured recall floor)
 
 Validation checks assert the structural claims future PRs must not regress:
 compiled steps stay below group count (shape-bucket sharing), full batches
@@ -65,9 +74,11 @@ trace bit-exactly, deadline batching lifts mean occupancy over
 single-submission on every swept configuration, paging stays bit-exact
 with live eviction/restore traffic below full residency, prefetch
 strictly improves the hit rate and miss rate at the same budget, sharded
-serving answers bit-identically at every shard count, and turning the
+serving answers bit-identically at every shard count, turning the
 observability layer on neither changes an answer nor costs more than 5%
-of the p50 per-launch step time.
+of the p50 per-launch step time, and shadow-exact recall sampling is
+bit-invisible while its online estimate matches the offline oracle
+exactly and clears every rung's planned recall bound.
 
     PYTHONPATH=src python -m benchmarks.run --only serve_bench
 """
@@ -722,6 +733,94 @@ def run(full: bool = False) -> dict:
         obs_runs["on"][-1]["svc"]
     )
 
+    # ---- sweep 10: online recall telemetry on the sweep-8 overload trace ----
+    # the degradation-on QoS replay rerun with shadow-exact recall
+    # sampling off vs on at rate 1.0: a deterministic hash of the query
+    # id picks the sample (here: everything), served answers are queued
+    # as host-copy shadow jobs, and the driver's idle ticks re-rank them
+    # against the exact oracle off the serving path.  recall_floor pins
+    # the strict rung's bound; the degraded rung carries the ladder's
+    # planned recall_bound.
+    RECALL_FLOOR = 0.5
+
+    def _recall_replay(sample_rate: float):
+        rsvc = RetrievalService(plan, data, cfg=ServiceConfig(
+            k=K, q_batch=Q_BATCH, use_pallas=False,
+            degrade_ladder=ladder8,
+            recall_sample_rate=sample_rate,
+            recall_floor=RECALL_FLOOR))
+        rsvc.warmup()
+        rsvc.reset_stats()
+        qos = QosScheduler(
+            classes=[QosClass("gold", weight=4.0, slo_ms=25.0),
+                     QosClass("bronze", weight=1.0, slo_ms=60.0,
+                              degradable=True)],
+            ladder=ladder8, capacity_per_tick=cap8,
+            degrade_after=3, restore_after=3,
+        )
+        asvc = AsyncRetrievalService(rsvc, clock=ManualClock(), qos=qos)
+        driver = ServiceDriver(asvc, prefetch=None)
+        futs = [None] * n8
+        i10, t10 = 0, 0.0
+        while i10 < n8 or asvc.pending_count:
+            while i10 < n8 and arr8[i10] <= t10:
+                asvc.clock.advance_to(arr8[i10])
+                futs[i10] = asvc.submit(qpts8[i10], wids8[i10],
+                                        tenant=ten8[i10])
+                i10 += 1
+            asvc.clock.advance_to(t10)
+            driver.step()
+            nxt = t10 + tick8
+            nd = asvc.next_deadline()
+            if nd is not None and t10 < nd < nxt:
+                nxt = nd
+            t10 = nxt
+            assert driver.stats.n_ticks < 100_000, "sweep 10 stalled"
+        return rsvc, futs
+
+    ref_svc, ref_futs = _recall_replay(0.0)
+    rec_svc, rec_futs = _recall_replay(1.0)
+    est = rec_svc.batcher.recall
+    n_drained_idle = est.summary()["n_executed"]  # driver idle ticks
+    est.drain()
+    recall_exact = all(
+        bool(np.array_equal(rec_futs[qi].result().ids,
+                            ref_futs[qi].result().ids)
+             and rec_futs[qi].result().n_checked
+             == ref_futs[qi].result().n_checked)
+        for qi in range(n8)
+    )
+    # offline oracle recomputation on the same sample: the estimator's
+    # own exact scan per query, folded with the same integer counts
+    off_hits = off_rel = 0
+    for qi in range(n8):
+        r = rec_futs[qi].result()
+        exact = est.oracle_topk(qpts8[qi], int(wids8[qi]),
+                                int(r.group_id))
+        exact_set = {int(i) for i in exact if i >= 0}
+        served_set = {int(i) for i in np.asarray(r.ids).reshape(-1)
+                      if i >= 0}
+        off_hits += len(served_set & exact_set)
+        off_rel += len(exact_set)
+    online_est = est.estimate()
+    offline_est = off_hits / off_rel if off_rel else float("nan")
+    rsum = est.summary()
+    rows_recall = [
+        [rung, rsum["observed"][rung], rsum["bound"][rung],
+         rsum["observed"][rung] - rsum["bound"][rung]]
+        for rung in sorted(rsum["observed"], key=int)
+    ]
+    print_table(
+        "online recall telemetry on the sweep-8 overload trace "
+        f"({'bit-exact' if recall_exact else 'MISMATCH'} vs sampling "
+        f"off; {rsum['n_executed']} shadow checks, {n_drained_idle} "
+        f"drained on idle ticks; online {online_est:.4f} vs offline "
+        f"{offline_est:.4f})",
+        ["rung", "observed recall", "planned bound", "margin"],
+        rows_recall,
+    )
+    metrics_by_sweep["10_recall"] = _metrics_condensed(rec_svc)
+
     qps_full = rows_occ[-1][2]
     qps_single = rows_occ[0][2]
     occ_async_min = min(r[2] for r in rows_async)
@@ -891,6 +990,33 @@ def run(full: bool = False) -> dict:
                      "with the full obs layer on",
             "ok": bool(obs_overhead < 0.05),
         },
+        {
+            "check": "recall: shadow sampling at rate 1.0 is bit-exact "
+                     "(ids, n_checked) vs sampling off on the overload "
+                     "trace",
+            "ok": recall_exact,
+        },
+        {
+            "check": "recall: the online micro-averaged estimate equals "
+                     "the offline oracle recomputation bit-for-bit",
+            "ok": bool(online_est == offline_est),
+        },
+        {
+            "check": "recall: every sampled query was shadow-checked "
+                     "(no drops, full coverage at rate 1.0)",
+            "ok": bool(rsum["n_executed"] == n8
+                       and rsum["n_dropped"] == 0),
+        },
+        {
+            "check": "recall: the driver's idle ticks drained shadow "
+                     "work off-path during the replay",
+            "ok": bool(n_drained_idle > 0),
+        },
+        {
+            "check": "recall: per-rung observed recall holds at or "
+                     "above the rung's planned bound",
+            "ok": bool(all(r[1] >= r[2] for r in rows_recall)),
+        },
     ]
     for v in validation:
         print(("PASS " if v["ok"] else "FAIL ") + v["check"])
@@ -954,6 +1080,15 @@ def run(full: bool = False) -> dict:
         ],
         "obs_overhead_fraction": float(obs_overhead),
         "obs_reps": OBS_REPS,
+        "recall_sweep": rows_recall,
+        "recall_sweep_columns": [
+            "rung", "observed_recall", "planned_bound", "margin",
+        ],
+        "recall_online_estimate": float(online_est),
+        "recall_offline_estimate": float(offline_est),
+        "recall_n_shadow_checks": int(rsum["n_executed"]),
+        "recall_n_drained_idle": int(n_drained_idle),
+        "recall_floor": RECALL_FLOOR,
         "metrics_by_sweep": metrics_by_sweep,
         "validation": validation,
     }

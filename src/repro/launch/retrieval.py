@@ -50,7 +50,12 @@ Steps:
               per-query trace spans to JSONL, the unified metrics
               registry as Prometheus text or JSON, and per-signature
               compile/dispatch attribution (plus a jax.profiler capture
-              when available)
+              when available).
+              ``--recall-sample-rate`` shadow-samples live queries for
+              exact-oracle recall estimation; ``--health`` prints the
+              per-rung observed-recall and alert report and
+              ``--alerts-out`` exports the SLO burn-rate alert events
+              fired on driver ticks
 
 ``--plan-out`` persists the ServingPlan npz so a separate serving job can
 start without re-planning.
@@ -68,6 +73,7 @@ from ..core.datagen import make_dataset, make_weight_set
 from ..core.params import PlanConfig
 from ..core.wlsh import WLSHIndex
 from ..kernels import platform as kernel_platform
+from ..obs import HealthMonitor, default_rules
 from ..serving.async_service import (
     AsyncRetrievalService,
     ManualClock,
@@ -206,12 +212,20 @@ def _print_qos_report(qos: QosScheduler) -> None:
 
 
 def _make_driver(args, asvc) -> ServiceDriver | None:
-    """A ServiceDriver over ``asvc`` per the CLI flags (None = undriven)."""
+    """A ServiceDriver over ``asvc`` per the CLI flags (None = undriven).
+
+    ``--alerts-out`` / ``--health`` attach a ``HealthMonitor`` with the
+    stock SLO rule set; the driver evaluates it once per tick.
+    """
     if not args.driver:
         return None
+    health = None
+    if args.alerts_out or args.health:
+        health = HealthMonitor(asvc.batcher.metrics, default_rules())
     return ServiceDriver(
         asvc,
         prefetch=DeadlinePrefetch() if args.prefetch else None,
+        health=health,
     )
 
 
@@ -271,6 +285,49 @@ def _finish_obs(args, svc) -> dict | None:
     return out
 
 
+def _finish_health(args, svc, driver=None) -> dict | None:
+    """Drain the shadow queue and report quality telemetry + alerts.
+
+    Runs after the serve phase: finishes any queued shadow-exact recall
+    jobs (off-path work a driver drains on idle ticks; the remainder is
+    executed here), prints the ``--health`` report, exports the alert
+    event log (``--alerts-out``, JSONL) and returns the health report
+    dict (None when neither recall sampling nor alerting is on).
+    """
+    est = svc.batcher.recall
+    health = driver.health if driver is not None else None
+    if est is None and health is None:
+        return None
+    out: dict = {}
+    if est is not None:
+        est.drain()
+        s = est.summary()
+        out["recall"] = s
+        if args.health:
+            print(f"health: recall sample rate {s['sample_rate']:.2f} "
+                  f"-> {s['n_sampled']} sampled, {s['n_executed']} "
+                  f"shadow-checked, {s['n_dropped']} dropped")
+            for rung in sorted(s["observed"], key=int):
+                obs_r = s["observed"][rung]
+                bound = s["bound"][rung]
+                print(f"  rung {rung}: observed recall {obs_r:.3f} "
+                      f"(bound {bound:.3f}, "
+                      f"margin {obs_r - bound:+.3f})")
+    if health is not None:
+        hs = health.summary()
+        out["alerts"] = hs
+        if args.health:
+            n_fired = sum(r["fired"] for r in hs["rules"].values())
+            n_cleared = sum(r["cleared"] for r in hs["rules"].values())
+            firing = ",".join(hs["firing"]) or "none"
+            print(f"health: alerts over {hs['tick']} ticks: {n_fired} "
+                  f"fired / {n_cleared} cleared; firing now: {firing}")
+        if args.alerts_out:
+            n = health.export_jsonl(args.alerts_out)
+            print(f"obs: {n} alert events -> {args.alerts_out}")
+    return out
+
+
 def _print_cache_report(cache: dict) -> None:
     """State-cache report: residency, utilization, paging + prefetch work."""
     util = (f", budget {cache['budget_utilization']:.0%} used"
@@ -315,7 +372,9 @@ def run(args) -> dict:
     if reserve is None:  # headroom for every op turning out to be an insert
         reserve = args.n_queries if args.insert_rate > 0 else 0
     ladder = args.degrade_ladder if args.qos else ()
-    obs = bool(args.trace_out or args.metrics_out or args.profile_dir)
+    obs = bool(args.trace_out or args.metrics_out or args.profile_dir
+               or args.recall_sample_rate > 0 or args.health
+               or args.alerts_out)
     scfg = ServiceConfig(k=args.k, q_batch=args.q_batch,
                          max_delay_ms=args.max_delay_ms,
                          max_resident_groups=args.max_resident_groups,
@@ -325,7 +384,8 @@ def run(args) -> dict:
                          use_pallas=args.use_pallas,
                          n_shards=args.shards,
                          degrade_ladder=ladder,
-                         obs=obs)
+                         obs=obs,
+                         recall_sample_rate=args.recall_sample_rate)
     svc = RetrievalService(plan, data, cfg=scfg)
     if obs and args.profile_dir:
         svc.batcher.profiler.profile_dir = args.profile_dir
@@ -355,6 +415,7 @@ def run(args) -> dict:
     )
     qpts = qpts + rng.normal(0, args.q_noise, qpts.shape).astype(np.float32)
     async_report = None
+    driver = None
     if args.insert_rate > 0:
         return _serve_mixed(args, svc, plan, rng, qpts, wids,
                             t_plan=t_plan, t_build=t_build)
@@ -420,6 +481,7 @@ def run(args) -> dict:
             or args.device_budget is not None or args.driver):
         _print_cache_report(cache)
     obs_report = _finish_obs(args, svc)
+    health_report = _finish_health(args, svc, driver)
 
     n_bad = 0
     if args.check:
@@ -446,6 +508,7 @@ def run(args) -> dict:
         "n_check_failures": n_bad,
         "async": async_report,
         "obs": obs_report,
+        "health": health_report,
     }
 
 
@@ -536,6 +599,7 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
               f"{recompiled} recompiles")
         assert n_bad == 0, f"{n_bad} streaming checks failed"
     obs_report = _finish_obs(args, svc)
+    health_report = _finish_health(args, svc, driver)
     return {
         "n_groups": plan.n_groups,
         "beta_total": plan.beta_total,
@@ -551,6 +615,7 @@ def _serve_mixed(args, svc, plan, rng, qpts, wids, t_plan, t_build):
         "n_check_failures": n_bad,
         "async": None,
         "obs": obs_report,
+        "health": health_report,
         "driver": driver.stats.summary() if driver is not None else None,
     }
 
@@ -657,6 +722,25 @@ def parse_args(argv=None):
                          "dispatch-time attribution, plus a jax.profiler "
                          "trace captured into DIR when the profiler is "
                          "available; implies the obs layer on")
+    ap.add_argument("--recall-sample-rate", type=float, default=0.0,
+                    metavar="RATE",
+                    help="quality telemetry: shadow-sample this fraction "
+                         "of live queries (deterministic hash of the "
+                         "query id) and re-rank their served answers "
+                         "against the exact host oracle off the serving "
+                         "path; answers stay bit-exact; implies the obs "
+                         "layer on")
+    ap.add_argument("--alerts-out", default=None, metavar="PATH",
+                    help="with --driver: attach the stock SLO burn-rate "
+                         "alert rules (deadline misses, tenant SLO, "
+                         "prefetch waste, recall-below-bound) to the "
+                         "driver ticks and export the alert events to "
+                         "PATH as JSONL")
+    ap.add_argument("--health", action="store_true",
+                    help="print the quality-telemetry report after "
+                         "serving: per-rung observed recall vs its "
+                         "ladder bound, shadow-queue accounting, and "
+                         "(with --driver) the alert-rule summary")
     ap.add_argument("--use-pallas", choices=["auto", "on", "off",
                                              "interpret"], default=None,
                     help="query kernel path: auto = per-backend fused "
@@ -677,6 +761,12 @@ def parse_args(argv=None):
         args.use_pallas = "auto"
     if not 0.0 <= args.insert_rate <= 1.0:
         ap.error(f"--insert-rate must be in [0, 1], got {args.insert_rate}")
+    if not 0.0 <= args.recall_sample_rate <= 1.0:
+        ap.error(f"--recall-sample-rate must be in [0, 1], got "
+                 f"{args.recall_sample_rate}")
+    if args.alerts_out and not args.driver:
+        ap.error("--alerts-out needs the tick-driven alert evaluation; "
+                 "add --driver (and --async)")
     if args.driver and not args.use_async:
         ap.error("--driver drives the async frontend; add --async")
     if args.prefetch and not args.driver:

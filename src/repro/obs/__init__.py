@@ -1,4 +1,4 @@
-"""Observability layer: metrics registry, per-query traces, profiling.
+"""Observability layer: metrics, traces, profiling, quality telemetry.
 
 Zero-dependency (stdlib + optional ``jax.profiler``) building blocks
 threaded through the serving stack:
@@ -11,27 +11,46 @@ threaded through the serving stack:
 * :mod:`repro.obs.trace` — per-query :class:`TraceSpan` lifecycle
   (``submit -> route -> admit -> queue -> prefetch/restore -> launch ->
   merge -> resolve``) on the injectable clock, ring-buffered by
-  :class:`Tracer` with JSONL export.
+  :class:`Tracer` with JSONL export and exact drop accounting.
 * :mod:`repro.obs.profile` — scoped wrappers around ``jax.profiler``
   plus per-step compile-count and dispatch-time attribution keyed by
   ``IndexConfig.shape_signature()``.
+* :mod:`repro.obs.recall` — online quality telemetry: a deterministic
+  hash sampler feeding shadow jobs that re-rank served answers against
+  the exact host oracle off the serving path
+  (:class:`RecallEstimator`).
+* :mod:`repro.obs.health` — SLO burn-rate alerting: multi-window
+  :class:`AlertRule` evaluation over registry diffs per driver tick,
+  typed ring-retained :class:`Alert` events (:class:`HealthMonitor`).
 
 Tracing and profiling are gated behind ``ServiceConfig.obs`` (off by
 default, bit-exact on or off); the metrics registry always exists — the
-stats surfaces need it — and never touches device values.
+stats surfaces need it — and never touches device values.  Recall
+sampling (``ServiceConfig.recall_sample_rate``) implies ``obs`` and is
+equally bit-invisible to answers.
 """
 
+from .health import Alert, AlertRule, HealthMonitor, default_rules
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .profile import Profiler
+from .recall import RecallEstimator, ShadowJob, sample_hash, should_sample
 from .trace import STAGES, Tracer, TraceSpan
 
 __all__ = [
+    "Alert",
+    "AlertRule",
     "Counter",
     "Gauge",
+    "HealthMonitor",
     "Histogram",
     "MetricsRegistry",
     "Profiler",
+    "RecallEstimator",
     "STAGES",
+    "ShadowJob",
     "TraceSpan",
     "Tracer",
+    "default_rules",
+    "sample_hash",
+    "should_sample",
 ]

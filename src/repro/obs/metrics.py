@@ -49,6 +49,23 @@ def _fmt(v: float) -> str:
     return str(int(f)) if f.is_integer() and abs(f) < 1e15 else repr(f)
 
 
+def _escape_label(value: str) -> str:
+    """Escape a label value per the Prometheus exposition spec.
+
+    Inside a quoted label value, backslash, double-quote and newline
+    must be written as ``\\\\``, ``\\"`` and ``\\n`` respectively —
+    everything else passes through verbatim.
+    """
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _labpair(kv: str) -> str:
+    """Render one ``k=v`` label-key fragment as ``k="escaped-v"``."""
+    k, v = kv.split("=", 1)
+    return f'{k}="{_escape_label(v)}"'
+
+
 class Counter:
     """Monotone counter with optional labels (one series per label set)."""
 
@@ -350,13 +367,10 @@ class MetricsRegistry:
                         cum += c
                         le = "+Inf" if ub == math.inf else _fmt(ub)
                         lab = ",".join(
-                            [f'{kv.split("=", 1)[0]}='
-                             f'"{kv.split("=", 1)[1]}"' for kv in base]
-                            + [f'le="{le}"'])
+                            [_labpair(kv) for kv in base] + [f'le="{le}"'])
                         lines.append(f"{name}_bucket{{{lab}}} {cum}")
                     suffix = ("{" + ",".join(
-                        f'{kv.split("=", 1)[0]}="{kv.split("=", 1)[1]}"'
-                        for kv in base) + "}") if base else ""
+                        _labpair(kv) for kv in base) + "}") if base else ""
                     lines.append(f"{name}_sum{suffix} "
                                  f"{_fmt(cell['sum'])}")
                     lines.append(f"{name}_count{suffix} {cell['count']}")
@@ -365,8 +379,7 @@ class MetricsRegistry:
                     lab = ""
                     if key:
                         lab = "{" + ",".join(
-                            f'{kv.split("=", 1)[0]}="{kv.split("=", 1)[1]}"'
-                            for kv in key.split(",")) + "}"
+                            _labpair(kv) for kv in key.split(",")) + "}"
                     lines.append(f"{name}{lab} {_fmt(v)}")
         return "\n".join(lines) + ("\n" if lines else "")
 

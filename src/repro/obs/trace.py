@@ -15,8 +15,11 @@ histogram pass stopped on it (``budget_capped``), the degradation
 ``rung`` at launch, and the shard count.
 
 The :class:`Tracer` retains finished spans in a fixed-capacity ring
-(old spans fall off; ``n_started``/``n_finished`` keep exact totals)
-and exports them as JSONL, one span per line.
+(old spans fall off; ``n_started``/``n_finished`` keep exact totals and
+``n_dropped`` counts ring evictions explicitly, mirrored into the
+registry as ``wlsh_trace_dropped_total`` when a registry is bound) and
+exports them as JSONL — a ``_meta`` header line with the exact totals,
+then one span per line.
 """
 
 from __future__ import annotations
@@ -38,7 +41,7 @@ STAGES: tuple[str, ...] = (
 
 _ATTRS = ("query_id", "tenant", "weight_id", "group_id", "rung",
           "n_shards", "cause", "stop_level", "n_checked", "budget",
-          "budget_capped")
+          "budget_capped", "recall")
 
 
 class TraceSpan:
@@ -60,6 +63,7 @@ class TraceSpan:
         self.n_checked = -1      # candidates verified (cost model)
         self.budget = -1         # candidate budget k + ceil(gamma*n)
         self.budget_capped = False  # histogram pass stopped on budget?
+        self.recall = -1.0       # shadow-exact recall; -1 = not sampled
         self.stages: dict[str, float] = {}
 
     def mark(self, stage: str, t: float) -> None:
@@ -110,8 +114,14 @@ class TraceSpan:
 class Tracer:
     """Ring-buffered span store: begin/finish, retention, JSONL export."""
 
-    def __init__(self, capacity: int = 4096):
-        """Retain at most ``capacity`` finished spans (oldest dropped)."""
+    def __init__(self, capacity: int = 4096, metrics=None):
+        """Retain at most ``capacity`` finished spans (oldest dropped).
+
+        When a :class:`~repro.obs.metrics.MetricsRegistry` is passed as
+        ``metrics``, every ring eviction also increments the
+        ``wlsh_trace_dropped_total`` counter there, so overflow is
+        visible on the same surface as every other serving metric.
+        """
         if capacity < 1:
             raise ValueError(f"tracer capacity must be >= 1, "
                              f"got {capacity}")
@@ -121,6 +131,11 @@ class Tracer:
         self._next_id = 0
         self.n_started = 0
         self.n_finished = 0
+        self.n_dropped = 0
+        self._dropped_ctr = (
+            metrics.counter("wlsh_trace_dropped_total",
+                            "finished spans evicted from the trace ring")
+            if metrics is not None else None)
 
     def begin(self, weight_id: int = -1, group_id: int = -1,
               tenant: str | None = None) -> TraceSpan:
@@ -132,10 +147,27 @@ class Tracer:
         return TraceSpan(qid, weight_id, group_id, tenant)
 
     def finish(self, span: TraceSpan) -> None:
-        """Retire a span into the retention ring."""
+        """Retire a span into the retention ring.
+
+        When the ring is full the oldest retained span is evicted and
+        counted in ``n_dropped`` (and ``wlsh_trace_dropped_total`` when
+        a registry is bound) — overflow is never silent.  The exact
+        ledger ``n_started == len(spans()) + n_dropped + n_inflight``
+        holds at all times.
+        """
         with self._lock:
+            if len(self._ring) == self.capacity:
+                self.n_dropped += 1
+                if self._dropped_ctr is not None:
+                    self._dropped_ctr.inc()
             self._ring.append(span)
             self.n_finished += 1
+
+    @property
+    def n_inflight(self) -> int:
+        """Spans begun but not yet finished."""
+        with self._lock:
+            return self.n_started - self.n_finished
 
     def spans(self) -> list[TraceSpan]:
         """Snapshot of the retained spans, oldest first."""
@@ -143,19 +175,51 @@ class Tracer:
             return list(self._ring)
 
     def export_jsonl(self, path) -> int:
-        """Write retained spans to ``path`` as JSONL; returns the count."""
+        """Write retained spans to ``path`` as JSONL; returns the count.
+
+        The first line is a ``_meta`` header carrying the exact totals
+        (``n_started``/``n_finished``/``n_dropped``/``n_inflight`` and
+        the ring capacity), so an export taken after overflow still
+        states how many spans it is missing.  ``load_jsonl`` skips it.
+        """
         spans = self.spans()
+        with self._lock:
+            meta = {"n_started": self.n_started,
+                    "n_finished": self.n_finished,
+                    "n_dropped": self.n_dropped,
+                    "n_inflight": self.n_started - self.n_finished,
+                    "n_retained": len(spans),
+                    "capacity": self.capacity}
         with open(path, "w") as fh:
+            fh.write(json.dumps({"_meta": meta}) + "\n")
             for span in spans:
                 fh.write(json.dumps(span.to_dict()) + "\n")
         return len(spans)
 
     @staticmethod
     def load_jsonl(path) -> list[TraceSpan]:
-        """Read spans back from a JSONL export (round-trip tests, CLI)."""
+        """Read spans back from a JSONL export (round-trip tests, CLI).
+
+        The ``_meta`` header line (when present) is skipped; use
+        :meth:`load_jsonl_meta` to read it.
+        """
         out = []
         with open(path) as fh:
             for line in fh:
-                if line.strip():
-                    out.append(TraceSpan.from_dict(json.loads(line)))
+                if not line.strip():
+                    continue
+                d = json.loads(line)
+                if "_meta" in d:
+                    continue
+                out.append(TraceSpan.from_dict(d))
         return out
+
+    @staticmethod
+    def load_jsonl_meta(path) -> dict | None:
+        """The ``_meta`` header of a JSONL export (None on old exports)."""
+        with open(path) as fh:
+            for line in fh:
+                if line.strip():
+                    d = json.loads(line)
+                    return d.get("_meta")
+        return None

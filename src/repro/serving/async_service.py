@@ -403,16 +403,23 @@ class AsyncRetrievalService:
         return n
 
     def idle_work(self) -> int:
-        """One slice of idle-time background work (sealed compaction).
+        """One slice of idle-time background work, returning rows compacted.
 
         Compacts the streaming delta's *sealed* backlog when
         ``compact_on_idle`` is set, returning the rows absorbed.  Called
         by an undriven idle ``poll()``, or by the ``ServiceDriver``'s
-        idle ticks once one owns the service.
+        idle ticks once one owns the service.  A tick with nothing to
+        compact instead executes one bounded slice of the shadow recall
+        queue (``ServiceConfig.recall_shadow_slice`` oracle re-ranks) —
+        quality telemetry rides the quiet ticks, never a launch.
         """
+        n = 0
         if self.compact_on_idle and self.batcher.delta is not None:
-            return self.batcher.delta.compact_sealed()
-        return 0
+            n = self.batcher.delta.compact_sealed()
+        recall = self.batcher.recall
+        if n == 0 and recall is not None and recall.backlog:
+            recall.run(max_jobs=recall.slice)
+        return n
 
     # ------------------------------------------------------------- streaming
 

@@ -40,7 +40,7 @@ import numpy as np
 
 from ..core.serving_plan import ServingPlan
 from ..distributed import group_sharding
-from ..obs import MetricsRegistry, Profiler, Tracer
+from ..obs import MetricsRegistry, Profiler, RecallEstimator, Tracer
 from ..index.builder import (
     build_group_state,
     offload_state,
@@ -119,6 +119,19 @@ class ServiceConfig:
     # rung's step is compiled at warmup (c/k are shape-signature keys),
     # so runtime degradation never recompiles; rung answers with k' < k
     # are padded -1/inf back to k so result shapes never change
+    recall_sample_rate: float = 0.0  # shadow-exact recall telemetry:
+    # sample this fraction of served queries (deterministic hash of the
+    # span's query id — no wall randomness) into shadow jobs re-ranked
+    # against the exact host oracle off the serving path.  > 0 implies
+    # obs (spans carry the query identity); answers stay bit-exact
+    recall_shadow_max: int = 1024  # shadow queue depth cap; offers
+    # beyond it are dropped and counted, never buffered unbounded
+    recall_shadow_slice: int = 8  # shadow jobs executed per idle tick
+    # (ServiceDriver idle_work), so shadow re-ranking never competes
+    # with deadline launches
+    recall_floor: float = 0.0  # observed-recall reference bound for the
+    # strict rung 0 (rungs >= 1 use degrade_ladder[r-1].recall_bound);
+    # feeds the wlsh_recall_bound_margin gauge and the below-bound alert
 
     def __post_init__(self):
         # normalize the CLI spellings onto the IndexConfig values (frozen
@@ -213,6 +226,30 @@ class ServiceConfig:
                     f"degrade_ladder[{i}].k={step.k} exceeds the strict "
                     f"k={self.k} (relaxation must not widen results)"
                 )
+        if not (0.0 <= self.recall_sample_rate <= 1.0):  # also rejects NaN
+            raise ValueError(
+                f"recall_sample_rate must be in [0, 1], got "
+                f"{self.recall_sample_rate}"
+            )
+        if self.recall_shadow_max < 1:
+            raise ValueError(
+                f"recall_shadow_max must be >= 1, got "
+                f"{self.recall_shadow_max}"
+            )
+        if self.recall_shadow_slice < 1:
+            raise ValueError(
+                f"recall_shadow_slice must be >= 1, got "
+                f"{self.recall_shadow_slice}"
+            )
+        if not (0.0 <= self.recall_floor <= 1.0):
+            raise ValueError(
+                f"recall_floor must be in [0, 1], got {self.recall_floor}"
+            )
+        if self.recall_sample_rate > 0 and not self.obs:
+            # shadow sampling keys on the tracer's query ids; force the
+            # obs layer on (bit-exact either way) rather than silently
+            # sampling nothing
+            object.__setattr__(self, "obs", True)
         try:
             jnp.dtype(self.vec_dtype)
         except TypeError:
@@ -462,8 +499,14 @@ class Batcher:
                 )
         self.clock = time.monotonic  # injectable; async frontend re-binds
         self.metrics = MetricsRegistry()
-        self.tracer = Tracer(cfg.obs_trace_capacity) if cfg.obs else None
+        self.tracer = (Tracer(cfg.obs_trace_capacity, metrics=self.metrics)
+                       if cfg.obs else None)
         self.profiler = Profiler() if cfg.obs else None
+        # shadow-exact recall telemetry (obs.recall): sampled served
+        # queries are re-ranked against the exact host oracle off the
+        # serving path.  None when sampling is off — zero overhead.
+        self.recall = (RecallEstimator(self)
+                       if cfg.recall_sample_rate > 0 else None)
         self._cache_events: list[str] | None = None  # span attribution
         self.step_cache = QueryStepCache()
         if self.profiler is not None:
@@ -538,6 +581,23 @@ class Batcher:
             return int(self.plan.c), int(self.cfg.k)
         step = self.cfg.degrade_ladder[rung - 1]
         return int(step.c), int(step.k)
+
+    def recall_bound_of(self, rung: int) -> float:
+        """The observed-recall reference bound at ladder ``rung``.
+
+        Rung 0 (strict) answers carry ``ServiceConfig.recall_floor``;
+        rung ``r >= 1`` answers carry the planned
+        ``degrade_ladder[r - 1].recall_bound``.  The shadow recall
+        estimator publishes ``wlsh_recall_bound_margin`` (observed −
+        bound) against this value.
+        """
+        if not 0 <= rung <= self.n_rungs:
+            raise ValueError(
+                f"rung must be in [0, {self.n_rungs}], got {rung}"
+            )
+        if rung == 0:
+            return float(self.cfg.recall_floor)
+        return float(self.cfg.degrade_ladder[rung - 1].recall_bound)
 
     def group_config(self, gi: int, rung: int = 0) -> IndexConfig:
         """Padded IndexConfig for group ``gi`` (the jit-cache key).
@@ -896,4 +956,13 @@ class Batcher:
                 if own_spans:
                     s.mark("resolve", t_merge)
                     tr.finish(s)
+            if self.recall is not None:
+                # shadow-sample by deterministic hash of the span's query
+                # id: enqueue only (host copies) — the answer arrays are
+                # returned untouched, so sampling is bit-invisible
+                for i, s in enumerate(spans):
+                    self.recall.offer(
+                        s, queries[i], int(weight_ids[i]), int(gi),
+                        int(rung), ids[i]
+                    )
         return ids, dists, stop, chk

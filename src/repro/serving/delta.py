@@ -422,6 +422,35 @@ class DeltaIndex:
         """Uncompacted (open + sealed) rows buffered for group ``gi``."""
         return self._groups[int(gi)].n_pending
 
+    def visible_rows(self, gi: int) -> tuple[np.ndarray, np.ndarray]:
+        """(global ids, vectors) of every row group ``gi`` can return.
+
+        The exact-oracle corpus for one group: live base rows, the
+        group's compacted append log, and its uncompacted (open +
+        sealed) rows, with tombstoned ids filtered out — precisely the
+        candidate set a launch through ``augment`` can surface.  Used
+        by the shadow recall estimator; read-only.
+        """
+        gd = self._groups[int(gi)]
+        base_ids = (np.arange(self.base_n, dtype=np.int64)
+                    if self._base_ids is None else self._base_ids)
+        ids = [base_ids]
+        vecs = [np.asarray(self.batcher.points)[base_ids]]
+        if len(gd.compacted_ids):
+            ids.append(gd.compacted_ids)
+            vecs.append(np.concatenate(gd.compacted_vecs))
+        if gd.n_pending:
+            pids, pvecs = gd.pending_rows()
+            ids.append(pids)
+            vecs.append(pvecs)
+        all_ids = np.concatenate(ids)
+        all_vecs = np.concatenate(vecs)
+        if self.tombstones:
+            live = ~np.isin(all_ids, np.fromiter(
+                self.tombstones, np.int64, count=len(self.tombstones)))
+            all_ids, all_vecs = all_ids[live], all_vecs[live]
+        return all_ids, all_vecs
+
     def augment(self, gi, queries, weight_ids, ids, dists):
         """Fold the group's delta state into one launch's indexed hits.
 

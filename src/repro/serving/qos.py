@@ -487,6 +487,25 @@ class QosScheduler:
         rung = self.rung_of(tenant)
         return 1.0 if rung == 0 else self.ladder[rung - 1].cost
 
+    def recall_bound_of(self, rung: int, strict_bound: float = 1.0
+                        ) -> float:
+        """The planned recall floor at ladder ``rung``.
+
+        Rung 0 (strict parameters) carries ``strict_bound`` — the
+        caller's reference for undegraded answers (the serving stack
+        passes ``ServiceConfig.recall_floor``); rung ``r >= 1`` carries
+        ``ladder[r - 1].recall_bound``.  The shadow recall estimator
+        and the ``recall_below_bound`` alert compare observed recall
+        against this value per rung.
+        """
+        if not 0 <= rung <= len(self.ladder):
+            raise ValueError(
+                f"rung must be in [0, {len(self.ladder)}], got {rung}"
+            )
+        if rung == 0:
+            return float(strict_bound)
+        return float(self.ladder[rung - 1].recall_bound)
+
     def plan_launches(self, expired, now: float) -> list:
         """Fair-order the tick's expired launches under the capacity.
 

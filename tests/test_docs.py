@@ -47,6 +47,8 @@ DOCSTRING_SCOPE = [
     "src/repro/obs/metrics.py",
     "src/repro/obs/trace.py",
     "src/repro/obs/profile.py",
+    "src/repro/obs/recall.py",
+    "src/repro/obs/health.py",
 ]
 
 # quickstart smoke: same flags as documented, shrunk to a tiny corpus
@@ -64,7 +66,7 @@ TINY_OVERRIDES = {
     "--shards": "1",
 }
 _STORE_TRUE = {"--check", "--async", "--no-pallas", "--driver",
-               "--prefetch", "--qos"}
+               "--prefetch", "--qos", "--health"}
 
 
 def _fenced_blocks(text: str) -> list[str]:
@@ -189,7 +191,14 @@ def test_docs_cross_links():
                    "MetricsRegistry", "TraceSpan", "Tracer", "Profiler",
                    "--trace-out", "--metrics-out", "--profile-dir",
                    "wlsh_group_queries_total", "wlsh_query_wait_seconds",
-                   "tick_summary"):
+                   "tick_summary",
+                   "obs/recall.py", "obs/health.py",
+                   "RecallEstimator", "HealthMonitor", "AlertRule",
+                   "sample_hash", "ShadowJob",
+                   "--recall-sample-rate", "--alerts-out", "--health",
+                   "wlsh_recall_observed", "wlsh_recall_bound_margin",
+                   "benchmarks/sentinel.py", "BASELINE.json",
+                   "BENCH_serve.json", "--write-baseline"):
         assert anchor in arch, f"ARCHITECTURE.md lost its {anchor} coverage"
 
 

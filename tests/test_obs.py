@@ -190,6 +190,50 @@ def test_text_exposition_parses_back_to_recorded_values():
     assert parsed["wlsh_w_seconds_sum"][""] == pytest.approx(6.05)
 
 
+def _unescape_label(value: str) -> str:
+    """Invert Prometheus label-value escaping (\\\\, \\", \\n)."""
+    out, i = [], 0
+    while i < len(value):
+        ch = value[i]
+        if ch == "\\" and i + 1 < len(value):
+            nxt = value[i + 1]
+            out.append({"\\": "\\", '"': '"', "n": "\n"}[nxt])
+            i += 2
+        else:
+            out.append(ch)
+            i += 1
+    return "".join(out)
+
+
+def test_text_exposition_escapes_hostile_label_values():
+    # backslash, double quote and newline in a label value must all be
+    # escaped per the exposition format, and the escaped text must
+    # unescape back to the original value (lossless round trip)
+    hostile = 'ev"il\\x\nnewline'
+    reg = MetricsRegistry()
+    reg.counter("wlsh_h_total", "hostile").inc(7, tenant=hostile)
+    reg.gauge("wlsh_h_gauge").set(1.0, tenant=hostile)
+    reg.histogram("wlsh_h_seconds", buckets=(1.0,)).observe(
+        0.5, tenant=hostile)
+    text = reg.to_text()
+    # every emitted line stays a single line (the raw newline never
+    # leaks into the output) and the value field still parses
+    for line in text.splitlines():
+        if line.startswith("#") or not line:
+            continue
+        float(line.rsplit(" ", 1)[1])
+    assert '\ntenant=' not in text.replace("wlsh_h", "")  # no torn lines
+    assert 'tenant="ev\\"il\\\\x\\nnewline"' in text
+    # parse one hostile line back: extract the quoted value and invert
+    # the escaping — it must equal the original label verbatim
+    line = next(ln for ln in text.splitlines()
+                if ln.startswith("wlsh_h_total{"))
+    quoted = line.split('tenant="', 1)[1].rsplit('"}', 1)[0]
+    assert _unescape_label(quoted) == hostile
+    # and the registry itself still reads the series under the raw key
+    assert reg.counter("wlsh_h_total").value(tenant=hostile) == 7
+
+
 def test_json_snapshot_round_trip_and_diff():
     reg = MetricsRegistry()
     reg.counter("wlsh_a_total").inc(2, group=0)
@@ -291,6 +335,45 @@ def test_tracer_ring_retention_and_exact_totals():
     assert tr.n_started == tr.n_finished == 10
     with pytest.raises(ValueError, match=">= 1"):
         Tracer(capacity=0)
+
+
+def test_tracer_overflow_ledger_invariant():
+    # every started span is accounted for: retained, dropped or
+    # in flight — the ledger never loses one to ring overflow
+    reg = MetricsRegistry()
+    tr = Tracer(capacity=4, metrics=reg)
+    open_span = tr.begin()  # stays in flight throughout
+    for _ in range(9):
+        tr.finish(tr.begin())
+    assert tr.n_started == 10
+    assert tr.n_finished == 9
+    assert tr.n_dropped == 5  # 9 finished into a 4-slot ring
+    assert tr.n_inflight == 1
+    assert len(tr.spans()) == 4
+    assert tr.n_started == len(tr.spans()) + tr.n_dropped + tr.n_inflight
+    assert tr.n_finished == len(tr.spans()) + tr.n_dropped
+    # the drop ledger is also a registry counter when metrics are bound
+    assert reg.counter("wlsh_trace_dropped_total").total() == 5
+    tr.finish(open_span)
+    assert tr.n_inflight == 0
+    assert tr.n_dropped == 6
+
+
+def test_jsonl_export_meta_records_drop_accounting(tmp_path):
+    tr = Tracer(capacity=2)
+    tr.begin()  # in flight at export time
+    for _ in range(5):
+        tr.finish(tr.begin())
+    path = tmp_path / "spans.jsonl"
+    assert tr.export_jsonl(path) == 2  # retained spans only
+    meta = Tracer.load_jsonl_meta(path)
+    assert meta == {
+        "n_started": 6, "n_finished": 5, "n_dropped": 3,
+        "n_inflight": 1, "n_retained": 2, "capacity": 2,
+    }
+    # load_jsonl skips the meta header and returns only spans
+    back = Tracer.load_jsonl(path)
+    assert [b.query_id for b in back] == [s.query_id for s in tr.spans()]
 
 
 def test_jsonl_export_round_trip(tmp_path):

@@ -1,0 +1,463 @@
+"""Online quality telemetry: shadow-exact recall, alerting, sentinel.
+
+Pinned claims:
+
+* the deterministic sampler is a pure function of the query id: rate 0
+  samples nothing, rate 1 everything, and the sampled set is monotone
+  in the rate (every id sampled at r stays sampled at every r' >= r) —
+  as hypothesis properties;
+* the same corpus + seed + rate yields the *identical* sampled
+  query-id set across the sync, async and driver-stepped frontends,
+  and the online micro-averaged recall estimate equals an offline
+  exact-oracle recomputation on that sample bit-for-bit;
+* turning recall sampling on changes no served answer — ids, dists,
+  stop levels and n_checked are bit-exact vs the sampling-off service;
+* a full shadow queue drops (and counts) sampled jobs instead of
+  growing unbounded, and offers always equal executions + drops;
+* the HealthMonitor implements multi-window burn-rate semantics: a
+  sustained bad ratio must exceed the threshold over BOTH the fast and
+  slow windows to fire, recovery clears the alert promptly, gauge
+  rules respect their consecutive-tick streak, and alert events are
+  edge-triggered, ring-retained and JSONL-exportable;
+* the bench-regression sentinel passes metrics equal to their
+  baseline, fails direction-aware on a worsened metric beyond its
+  band, tolerates improvements, and flags a disappeared metric.
+
+No wall-clock sleeps anywhere: replays run on ManualClock and the
+monitor's windows are counted in ticks.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from benchmarks import sentinel
+from repro.obs import (
+    AlertRule,
+    HealthMonitor,
+    MetricsRegistry,
+    default_rules,
+    sample_hash,
+    should_sample,
+)
+from repro.serving import (
+    AsyncRetrievalService,
+    ManualClock,
+    RetrievalService,
+    ServiceConfig,
+    ServiceDriver,
+    replay_open_loop,
+)
+from conftest import build_parity_service
+from repro.serving.scheduler import replay_with_driver
+
+K = 5
+Q_BATCH = 4
+RATE = 0.5
+
+
+def _traffic(data, weights, n_queries, seed=61):
+    rng = np.random.default_rng(seed)
+    wids = rng.integers(0, len(weights), n_queries)
+    qpts = data[rng.choice(len(data), n_queries, replace=False)].astype(
+        np.float32
+    )
+    qpts += rng.normal(0, 3.0, qpts.shape).astype(np.float32)
+    return qpts, wids
+
+
+def _sampling_service(plan, data, **cfg_kw):
+    svc = RetrievalService(
+        plan, data,
+        cfg=ServiceConfig(k=K, q_batch=Q_BATCH,
+                          recall_sample_rate=RATE, **cfg_kw),
+    )
+    svc.warmup()
+    return svc
+
+
+def _offline_recall(est, qpts, wids, results_by_qid) -> float:
+    """Micro-averaged oracle recall over the estimator's executed ids."""
+    hits = rel = 0
+    for qid in est.executed_ids():
+        ids, gid = results_by_qid[qid]
+        exact = est.oracle_topk(qpts[qid], int(wids[qid]), gid)
+        exact_set = {int(i) for i in exact if i >= 0}
+        served = {int(i) for i in np.asarray(ids).reshape(-1) if i >= 0}
+        hits += len(served & exact_set)
+        rel += len(exact_set)
+    return hits / rel if rel else float("nan")
+
+
+# ------------------------------------------------------- deterministic sampler
+
+
+def test_sampler_rate_edges():
+    ids = range(1_000)
+    assert not any(should_sample(i, 0.0) for i in ids)
+    assert not any(should_sample(i, -0.5) for i in ids)
+    assert all(should_sample(i, 1.0) for i in ids)
+    assert all(should_sample(i, 2.0) for i in ids)
+
+
+@settings(max_examples=50)
+@given(qid=st.integers(min_value=0, max_value=2**62),
+       rate=st.floats(min_value=0.0, max_value=1.0, allow_nan=False))
+def test_sampler_is_pure_function_of_id(qid, rate):
+    assert should_sample(qid, rate) == should_sample(qid, rate)
+    assert sample_hash(qid) == sample_hash(qid)
+
+
+@settings(max_examples=50)
+@given(lo=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+       hi=st.floats(min_value=0.0, max_value=1.0, allow_nan=False))
+def test_sampled_set_monotone_in_rate(lo, hi):
+    lo, hi = min(lo, hi), max(lo, hi)
+    ids = range(512)
+    at_lo = {i for i in ids if should_sample(i, lo)}
+    at_hi = {i for i in ids if should_sample(i, hi)}
+    assert at_lo <= at_hi
+
+
+def test_sampler_hits_the_configured_fraction():
+    # splitmix64 is uniform enough that the realized fraction over a
+    # contiguous id range tracks the rate closely
+    n = 4_096
+    for rate in (0.1, 0.3, 0.5, 0.9):
+        got = sum(should_sample(i, rate) for i in range(n)) / n
+        assert abs(got - rate) < 0.05
+
+
+# ------------------------------------- frontends: determinism and bit-exactness
+
+
+@pytest.mark.parametrize("p", [2.0], ids=["p2.0"])
+def test_sampling_on_is_bit_exact_and_matches_offline_oracle(p):
+    _, data, weights, host, plan, base_svc = build_parity_service(p)
+    qpts, wids = _traffic(data, weights, 28)
+    ref = base_svc.query(qpts, wids)  # sampling off
+
+    svc = _sampling_service(plan, data)
+    res = svc.query(qpts, wids)
+    assert np.array_equal(res.ids, ref.ids)
+    assert np.array_equal(res.dists, ref.dists)
+    assert np.array_equal(res.stop_levels, ref.stop_levels)
+    assert np.array_equal(res.n_checked, ref.n_checked)
+
+    est = svc.batcher.recall
+    assert est.backlog > 0  # serving only enqueued; nothing executed
+    est.drain()
+    sampled = sorted(est.executed_ids())
+    # the sampled set is exactly the hash-selected subset of query ids
+    # (the sync tracer assigns ids 0..n-1 in submission order)
+    assert sampled == [i for i in range(len(qpts))
+                       if should_sample(i, RATE)]
+    results = {qi: (ref.ids[qi], int(ref.group_ids[qi]))
+               for qi in range(len(qpts))}
+    assert est.estimate() == _offline_recall(est, qpts, wids, results)
+    s = est.summary()
+    assert s["n_sampled"] == s["n_executed"] == len(sampled)
+    assert s["n_dropped"] == 0 and s["backlog"] == 0
+
+
+def test_sync_async_driver_sample_identical_sets():
+    _, data, weights, host, plan, _ = build_parity_service(2.0)
+    qpts, wids = _traffic(data, weights, 24)
+    arrivals = np.cumsum(
+        np.random.default_rng(7).exponential(1 / 2_000.0, len(qpts)))
+
+    sync_svc = _sampling_service(plan, data)
+    sync_res = sync_svc.query(qpts, wids)
+    sync_svc.batcher.recall.drain()
+    sync_ids = sorted(sync_svc.batcher.recall.executed_ids())
+    sync_est = sync_svc.batcher.recall.estimate()
+
+    async_svc = _sampling_service(plan, data)
+    asvc = AsyncRetrievalService(async_svc, clock=ManualClock())
+    replay_open_loop(asvc, qpts, wids, arrivals)
+    async_svc.batcher.recall.drain()
+    assert sorted(async_svc.batcher.recall.executed_ids()) == sync_ids
+    assert async_svc.batcher.recall.estimate() == sync_est
+
+    drv_svc = _sampling_service(plan, data)
+    dsvc = AsyncRetrievalService(drv_svc, clock=ManualClock())
+    driver = ServiceDriver(dsvc)
+    res, _ = replay_with_driver(driver, qpts, wids, arrivals)
+    est = drv_svc.batcher.recall
+    n_idle_drained = len(est.executed_ids())
+    est.drain()
+    assert sorted(est.executed_ids()) == sync_ids
+    assert est.estimate() == sync_est
+    # the driver's idle ticks executed shadow work during the replay
+    assert n_idle_drained > 0
+    # and the driven answers are the sync answers bit-for-bit
+    assert np.array_equal(res.ids, sync_res.ids)
+    assert np.array_equal(res.n_checked, sync_res.n_checked)
+
+
+def test_sampled_spans_carry_their_shadow_recall():
+    _, data, weights, host, plan, _ = build_parity_service(2.0)
+    qpts, wids = _traffic(data, weights, 16)
+    svc = _sampling_service(plan, data)
+    svc.query(qpts, wids)
+    est = svc.batcher.recall
+    est.drain()
+    sampled = set(est.executed_ids())
+    for span in svc.batcher.tracer.spans():
+        if span.query_id in sampled:
+            assert 0.0 <= span.recall <= 1.0
+        else:
+            assert span.recall == -1.0  # not sampled
+
+
+def test_full_shadow_queue_drops_and_counts():
+    _, data, weights, host, plan, _ = build_parity_service(2.0)
+    qpts, wids = _traffic(data, weights, 24)
+    svc = RetrievalService(
+        plan, data,
+        cfg=ServiceConfig(k=K, q_batch=Q_BATCH,
+                          recall_sample_rate=1.0, recall_shadow_max=4),
+    )
+    svc.warmup()
+    svc.query(qpts, wids)
+    est = svc.batcher.recall
+    assert est.backlog == 4  # capped, never above shadow_max
+    est.drain()
+    s = est.summary()
+    assert s["n_sampled"] == len(qpts)  # every query hashed in
+    assert s["n_executed"] == 4
+    assert s["n_dropped"] == len(qpts) - 4
+    assert s["n_sampled"] == s["n_executed"] + s["n_dropped"]
+
+
+def test_recall_sample_rate_implies_obs_and_validates():
+    cfg = ServiceConfig(recall_sample_rate=0.25)
+    assert cfg.obs  # sampling keys on tracer query ids
+    with pytest.raises(ValueError, match="recall_sample_rate"):
+        ServiceConfig(recall_sample_rate=1.5)
+    with pytest.raises(ValueError, match="recall_shadow_max"):
+        ServiceConfig(recall_shadow_max=0)
+    with pytest.raises(ValueError, match="recall_floor"):
+        ServiceConfig(recall_floor=-0.1)
+
+
+# ------------------------------------------------------------- health monitor
+
+
+def _burn_monitor(threshold=0.25, fast=4, slow=10, min_events=1):
+    reg = MetricsRegistry()
+    bad = reg.counter("wlsh_bad_total")
+    due = reg.counter("wlsh_due_total")
+    mon = HealthMonitor(reg, [AlertRule(
+        name="burn", kind="burn_ratio", threshold=threshold,
+        numerator="wlsh_bad_total", denominator="wlsh_due_total",
+        fast_window=fast, slow_window=slow, min_events=min_events)])
+    return reg, bad, due, mon
+
+
+def test_burn_rule_needs_both_windows_hot():
+    # seed healthy history first: with an empty window even a short
+    # spike reads as ratio 1.0 over both windows (correctly — there is
+    # no good history to dilute it), which would mask the multi-window
+    # distinction this test pins
+    _, bad, due, mon = _burn_monitor()
+    t = 0.0
+    for _ in range(10):  # healthy: deadlines due, none missed
+        due.inc()
+        mon.observe(t := t + 1.0)
+    assert mon.firing() == []
+    # 2 hot ticks: fast ratio 2/4 > 0.25, slow ratio 2/12 < 0.25
+    for _ in range(2):
+        bad.inc()
+        due.inc()
+        mon.observe(t := t + 1.0)
+    assert mon.firing() == []  # slow window still healthy: no page
+    # sustain the burn until the slow window crosses too
+    fired = []
+    for _ in range(6):
+        bad.inc()
+        due.inc()
+        fired += mon.observe(t := t + 1.0)
+    assert [a.rule for a in mon.firing()] == ["burn"]
+    assert len(fired) == 1  # edge-triggered: one event, not per-tick
+    assert fired[0].value_fast > 0.25 and fired[0].value > 0.25
+    # recovery: the fast window clears the alert promptly
+    for _ in range(5):
+        due.inc()
+        mon.observe(t := t + 1.0)
+    assert mon.firing() == []
+    reg = mon.metrics
+    assert reg.counter("wlsh_alerts_fired_total").total() == 1
+    assert reg.counter("wlsh_alerts_cleared_total").total() == 1
+
+
+def test_burn_rule_min_events_gate():
+    _, bad, due, mon = _burn_monitor(min_events=4)
+    t = 0.0
+    bad.inc()
+    due.inc()  # ratio 1.0 but only 1 event: unjudgeable
+    mon.observe(t := t + 1.0)
+    assert mon.firing() == []
+    for _ in range(3):
+        bad.inc()
+        due.inc()
+        mon.observe(t := t + 1.0)
+    assert [a.rule for a in mon.firing()] == ["burn"]
+
+
+def test_gauge_rules_streak_and_edges():
+    reg = MetricsRegistry()
+    g = reg.gauge("wlsh_margin")
+    mon = HealthMonitor(reg, [AlertRule(
+        name="below", kind="gauge_below", threshold=0.0,
+        gauge="wlsh_margin", for_ticks=2)])
+    t = 0.0
+    g.set(0.5, rung="0")
+    mon.observe(t := t + 1.0)
+    assert mon.firing() == []
+    g.set(-0.1, rung="1")  # the worst series decides (min over series)
+    mon.observe(t := t + 1.0)
+    assert mon.firing() == []  # streak 1 < for_ticks 2
+    mon.observe(t := t + 1.0)
+    assert [a.rule for a in mon.firing()] == ["below"]
+    g.set(0.2, rung="1")  # one good tick resets the streak
+    mon.observe(t := t + 1.0)
+    assert mon.firing() == []
+
+
+def test_gauge_above_rule_and_export(tmp_path):
+    reg = MetricsRegistry()
+    depth = reg.gauge("wlsh_depth")
+    mon = HealthMonitor(reg, [AlertRule(
+        name="sat", kind="gauge_above", threshold=10.0,
+        gauge="wlsh_depth", for_ticks=1, severity="warn")])
+    depth.set(11.0)
+    fired = mon.observe(3.5)
+    assert [a.rule for a in fired] == ["sat"]
+    assert fired[0].severity == "warn" and fired[0].t_fired == 3.5
+    path = tmp_path / "alerts.jsonl"
+    assert mon.export_jsonl(path) == 1
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    assert lines[0]["rule"] == "sat" and lines[0]["value"] == 11.0
+    s = mon.summary()
+    assert s["rules"]["sat"]["fired"] == 1
+    assert s["rules"]["sat"]["firing"] is True
+
+
+def test_rule_validation_and_unique_names():
+    with pytest.raises(ValueError, match="kind"):
+        AlertRule(name="x", kind="weird", threshold=0.1)
+    with pytest.raises(ValueError, match="numerator"):
+        AlertRule(name="x", kind="burn_ratio", threshold=0.1)
+    with pytest.raises(ValueError, match="fast_window"):
+        AlertRule(name="x", kind="burn_ratio", threshold=0.1,
+                  numerator="n", fast_window=9, slow_window=3)
+    with pytest.raises(ValueError, match="gauge"):
+        AlertRule(name="x", kind="gauge_below", threshold=0.1)
+    reg = MetricsRegistry()
+    rule = AlertRule(name="dup", kind="gauge_below", threshold=0.0,
+                     gauge="g")
+    with pytest.raises(ValueError, match="unique"):
+        HealthMonitor(reg, [rule, rule])
+
+
+def test_default_rules_shape():
+    rules = default_rules()
+    names = {r.name for r in rules}
+    assert {"deadline_miss_burn", "tenant_slo_burn",
+            "prefetch_waste_burn", "recall_below_bound"} <= names
+    assert "queue_saturation" not in names  # needs a saturation point
+    with_cap = default_rules(max_pending=100)
+    sat = next(r for r in with_cap if r.name == "queue_saturation")
+    assert sat.threshold == pytest.approx(90.0)
+    # the stock set attaches to a registry without error
+    HealthMonitor(MetricsRegistry(), with_cap)
+
+
+def test_driver_surfaces_firing_alerts_in_tick_summary():
+    _, data, weights, host, plan, _ = build_parity_service(2.0)
+    qpts, wids = _traffic(data, weights, 12)
+    svc = _sampling_service(plan, data)
+    asvc = AsyncRetrievalService(svc, clock=ManualClock())
+    # a rule that fires immediately: queue depth above -1 is always true
+    mon = HealthMonitor(svc.batcher.metrics, [AlertRule(
+        name="always", kind="gauge_above", threshold=-1.0,
+        gauge="wlsh_pending_queue_depth", for_ticks=1)])
+    driver = ServiceDriver(asvc, health=mon)
+    arrivals = np.cumsum(
+        np.random.default_rng(3).exponential(1 / 2_000.0, len(qpts)))
+    replay_with_driver(driver, qpts, wids, arrivals)
+    assert [a.rule for a in mon.firing()] == ["always"]
+    assert "ALERTS: always" in driver.tick_summary()
+
+
+# ---------------------------------------------------- bench-regression sentinel
+
+
+_BASE = {
+    "p50_step_ms": 10.0, "qps": 100.0, "state_hit_rate": 0.8,
+    "deadline_miss_rate": 0.0, "observed_recall": 0.9,
+    "n_compiled_steps": 4, "n_shadow_dropped": 0,
+}
+
+
+def test_sentinel_compare_equal_passes():
+    rows = sentinel.compare(dict(_BASE), dict(_BASE))
+    assert rows and all(r["ok"] for r in rows)
+
+
+def test_sentinel_compare_direction_aware():
+    # worsening beyond the band fails in the metric's bad direction
+    cur = dict(_BASE, observed_recall=0.8)  # higher-better, -0.1
+    assert any(not r["ok"] and r["metric"] == "observed_recall"
+               for r in sentinel.compare(cur, _BASE))
+    cur = dict(_BASE, p50_step_ms=30.0)  # lower-better, 3x baseline
+    assert any(not r["ok"] and r["metric"] == "p50_step_ms"
+               for r in sentinel.compare(cur, _BASE))
+    # improvements never fail, however large
+    cur = dict(_BASE, p50_step_ms=0.1, observed_recall=1.0, qps=9_999.0)
+    assert all(r["ok"] for r in sentinel.compare(cur, _BASE))
+    # small wall-clock noise stays inside the wide band
+    cur = dict(_BASE, p50_step_ms=14.0, qps=80.0)
+    assert all(r["ok"] for r in sentinel.compare(cur, _BASE))
+
+
+def test_sentinel_compare_missing_metric_is_regression():
+    cur = dict(_BASE)
+    del cur["observed_recall"]
+    rows = sentinel.compare(cur, _BASE)
+    row = next(r for r in rows if r["metric"] == "observed_recall")
+    assert not row["ok"] and row["current"] is None
+
+
+def test_sentinel_cli_exit_codes(tmp_path):
+    base = tmp_path / "BASELINE.json"
+    out = tmp_path / "BENCH.json"
+    cur = tmp_path / "current.json"
+    cur.write_text(json.dumps({"metrics": _BASE}))
+    # no baseline yet: exit 2
+    assert sentinel.main(["--from-json", str(cur),
+                          "--baseline", str(base),
+                          "--out", str(out)]) == 2
+    # pin a baseline: exit 0, both artifacts written
+    assert sentinel.main(["--from-json", str(cur),
+                          "--baseline", str(base),
+                          "--out", str(out),
+                          "--write-baseline"]) == 0
+    assert json.loads(base.read_text())["metrics"] == _BASE
+    assert json.loads(out.read_text())["metrics"] == _BASE
+    # clean gate: exit 0
+    assert sentinel.main(["--from-json", str(cur),
+                          "--baseline", str(base),
+                          "--out", str(out)]) == 0
+    # injected regression: exit 1
+    bad = dict(_BASE, n_compiled_steps=5)  # zero-tolerance metric
+    worse = tmp_path / "worse.json"
+    worse.write_text(json.dumps(bad))  # bare dict form also accepted
+    assert sentinel.main(["--from-json", str(worse),
+                          "--baseline", str(base),
+                          "--out", str(out)]) == 1
